@@ -1,0 +1,37 @@
+"""Paper §6.2.2 churn table: fraction of programs switching backends and
+switches/program under DP=3 (MORI's CPU-tier residency tracking vs the
+offloading-agnostic baselines)."""
+from __future__ import annotations
+
+from benchmarks.common import SCHEDS, emit, run_sim
+
+
+def main() -> list[dict]:
+    rows = []
+    paper = {  # (churn_frac_range, switches_per_program) at 20/prog, §6.2.2
+        "mori": "0.3-2.9% / 0.00-0.04",
+        "ta+o": "14-15% / 0.35-0.38",
+        "ta": "14-15% / 0.35-0.38",
+        "smg": "(prefix-fragile)",
+    }
+    for conc in (20, 80):
+        for sched in SCHEDS:
+            _, r = run_sim(
+                sched, "h200-qwen3-30b-a3b", conc=conc, cpu_ratio=2.0, replicas=3
+            )
+            rows.append(
+                {
+                    "table": "churn",
+                    "concurrency_per_replica": conc,
+                    "scheduler": sched,
+                    "churn_frac": round(r.churn_frac, 4),
+                    "switches_per_program": round(r.switches_per_program, 4),
+                    "paper_at_20": paper[sched],
+                }
+            )
+    emit(rows, "churn.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Shared setup for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+from repro.sim import CONFIGS, Simulation
+from repro.traces import generate_corpus
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+ART.mkdir(exist_ok=True)
+
+#: paper-fidelity knobs: QUICK keeps `python -m benchmarks.run` minutes-scale;
+#: FULL reproduces the paper's one-hour runs (set BENCH_FULL=1).
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+DURATION_S = 3600.0 if FULL else 900.0
+WARMUP_S = 300.0 if FULL else 120.0
+CORPUS_N = 186
+
+SCHEDS = ["mori", "ta+o", "ta", "smg"]
+
+_corpus_cache = {}
+
+
+def corpus(seed: int = 0):
+    if seed not in _corpus_cache:
+        _corpus_cache[seed] = generate_corpus(CORPUS_N, seed=seed)
+    return _corpus_cache[seed]
+
+
+def run_sim(sched, hw_name, *, conc, cpu_ratio, replicas=1, seed=0, **kw):
+    sim = Simulation(
+        sched,
+        CONFIGS[hw_name],
+        corpus(),
+        num_replicas=replicas,
+        concurrency_per_replica=conc,
+        cpu_ratio=cpu_ratio,
+        duration_s=DURATION_S,
+        warmup_s=WARMUP_S,
+        seed=seed,
+        **kw,
+    )
+    return sim, sim.run()
+
+
+def save_json(name: str, obj) -> Path:
+    p = ART / name
+    p.write_text(json.dumps(obj, indent=1))
+    return p
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print rows as CSV and persist them as JSON."""
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))
+    save_json(name, rows)

@@ -1,0 +1,35 @@
+"""Paper Fig. 10 + §6.2.2: DP=3 multi-replica scheduling — throughput, TTFT,
+GPU utilization, and backend-affinity churn."""
+from __future__ import annotations
+
+from benchmarks.common import SCHEDS, emit, run_sim
+
+
+def main(concs=(20, 50, 80), ratios=(1.0, 2.0)) -> list[dict]:
+    rows = []
+    for ratio in ratios:
+        for conc in concs:
+            for sched in SCHEDS:
+                _, r = run_sim(
+                    sched, "h200-qwen3-30b-a3b", conc=conc, cpu_ratio=ratio,
+                    replicas=3,
+                )
+                rows.append(
+                    {
+                        "figure": "fig10",
+                        "cpu_ratio": ratio,
+                        "concurrency_per_replica": conc,
+                        "scheduler": sched,
+                        "tok_per_s": round(r.output_tok_per_s, 1),
+                        "ttft_avg_s": round(r.ttft_avg_s, 2),
+                        "gpu_util": round(r.gpu_util, 3),
+                        "churn_frac": round(r.churn_frac, 4),
+                        "switches_per_program": round(r.switches_per_program, 4),
+                    }
+                )
+    emit(rows, "fig10_multi_replica.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Deliverable (g): per-(arch x shape x mesh) roofline terms from the dry-run.
+
+Reads ``artifacts/dryrun.json`` (written by ``repro.launch.dryrun``) and, for
+every ok cell, derives the three roofline terms on the TPU v5e target:
+
+    compute    = FLOPs_per_device   / peak_FLOP/s          (197 TF bf16/chip)
+    memory     = HBM_bytes_per_dev  / HBM_bw               (819 GB/s/chip)
+    collective = wire_bytes_per_dev / ICI link bandwidth   (~50 GB/s/link)
+
+The dry-run's ``cost`` block is already *per device* (GSPMD-partitioned
+module) and loop-aware (scan bodies multiplied by trip count; see
+``repro.launch.hlo_cost``). The dominant term is the bottleneck §Perf
+iterates on.
+
+"Useful" model FLOPs:
+    train   : 6 * N * D          (fwd 2ND + bwd 4ND)
+    prefill : 2 * N * D
+    decode  : 2 * N * D          (D = batch tokens, one step)
+with N = active params for MoE (6*N_active*D per the assignment) — attention
+score/AV FLOPs are excluded by convention, so ratios > 1 are possible for
+long-context cells.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ART, emit
+
+# TPU v5e target constants (per chip / per link), from the assignment.
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+DRYRUN = ART / "dryrun.json"
+
+
+def _active_fraction(cfg) -> float:
+    """Active-parameter fraction for MoE archs (expert FFN utilization)."""
+    if not cfg.num_experts:
+        return 1.0
+    # 3 matrices (gate/up/down) per expert, all layers
+    expert = cfg.num_layers * cfg.num_experts * 3 * cfg.d_model * cfg.moe_d_ff
+    from repro.models import Model, count_params
+
+    total = count_params(Model(cfg).describe())
+    inactive = expert * (1.0 - cfg.top_k / cfg.num_experts)
+    return (total - inactive) / total
+
+
+def model_flops(arch: str, kind: str, tokens: int) -> tuple[float, float]:
+    """(useful FLOPs for the step, N_active) for the full cell (all devices)."""
+    from repro.configs import get_config
+    from repro.models import Model, count_params
+
+    cfg = get_config(arch)
+    n_total = count_params(Model(cfg).describe())
+    n_active = n_total * _active_fraction(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens, n_active
+
+
+def rows_from_dryrun(path: Path = DRYRUN) -> list[dict]:
+    data = json.loads(path.read_text())
+    rows = []
+    for key in sorted(data):
+        rec = data[key]
+        parts = key.split("|")
+        if len(parts) != 3:          # tagged perf-iteration entries
+            continue
+        arch, shape, mesh = parts
+        if rec["status"] != "ok":
+            rows.append(
+                {
+                    "arch": arch, "shape": shape, "mesh": mesh,
+                    "kind": rec.get("reason", rec.get("error", ""))[:60],
+                    "devices": "", "compute_s": "", "memory_s": "",
+                    "collective_s": "", "bound": rec["status"],
+                    "roofline_frac": "", "useful_ratio": "",
+                    "peak_gib": "",
+                }
+            )
+            continue
+        n_dev = rec["devices"]
+        flops_dev = rec["cost"]["flops"]
+        hbm_dev = rec["cost"]["hbm_bytes"]
+        wire_dev = rec["collectives"]["total_wire_bytes"]
+
+        t_c = flops_dev / PEAK_FLOPS
+        t_m = hbm_dev / HBM_BW
+        t_x = wire_dev / ICI_BW
+        bound = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+        t_step = max(t_c, t_m, t_x)
+
+        useful, _ = model_flops(arch, rec["kind"], rec["tokens_per_step"])
+        useful_dev = useful / n_dev
+        # roofline fraction: useful FLOPs per device over what the chips could
+        # do in the bound-limited step time (classic MFU-at-the-roofline).
+        frac = useful_dev / (t_step * PEAK_FLOPS) if t_step else 0.0
+
+        rows.append(
+            {
+                "arch": arch,
+                "shape": shape,
+                "mesh": mesh,
+                "kind": rec["kind"],
+                "devices": n_dev,
+                "compute_s": round(t_c, 6),
+                "memory_s": round(t_m, 6),
+                "collective_s": round(t_x, 6),
+                "bound": bound,
+                "roofline_frac": round(frac, 4),
+                "useful_ratio": round(useful_dev / flops_dev, 4) if flops_dev else "",
+                "peak_gib": round(rec["memory"]["peak_bytes"] / 2**30, 2),
+            }
+        )
+    return rows
+
+
+def main() -> list[dict]:
+    if not DRYRUN.exists():
+        print("roofline: artifacts/dryrun.json missing — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return []
+    rows = rows_from_dryrun()
+    emit(rows, "roofline.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything (QUICK)
+    PYTHONPATH=src python -m benchmarks.run --only fig10,roofline
+    BENCH_FULL=1 ... python -m benchmarks.run            # paper-length runs
+
+Each section prints CSV and persists JSON under artifacts/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    churn,
+    multi_replica,
+    phase_cdf,
+    roofline,
+    scheduler_overhead,
+    single_replica,
+    ssd_tier,
+    tool_call_cdf,
+)
+
+SECTIONS = [
+    ("fig3_tool_call_cdf", tool_call_cdf.main),
+    ("fig5_phase_cdf", phase_cdf.main),
+    ("fig7_9_single_replica", single_replica.main),
+    ("fig10_multi_replica", multi_replica.main),
+    ("table2_scheduler_overhead", scheduler_overhead.main),
+    ("churn", churn.main),
+    ("ssd_tier_7.1_extension", ssd_tier.main),
+    ("roofline", roofline.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated section prefixes")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    t_all = time.time()
+    for name, fn in SECTIONS:
+        if only and not any(name.startswith(o) or o in name for o in only):
+            continue
+        print(f"\n### {name} " + "#" * max(0, 60 - len(name)), flush=True)
+        t0 = time.time()
+        fn()
+        print(f"### {name} done in {time.time() - t0:.1f}s", flush=True)
+    print(f"\nall benchmarks done in {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Figs. 7-9: single-replica throughput / step rate / TTFT across
+three (GPU, model) pairs x {20,50,80} programs x {1x,2x} CPU ratios x all
+four systems."""
+from __future__ import annotations
+
+from benchmarks.common import SCHEDS, emit, run_sim
+
+HW_FIGS = {
+    "fig7": "h200-80g-qwen2.5-7b",
+    "fig8": "h200-qwen3-30b-a3b",
+    "fig9": "b200-llama3.1-70b-tp2",
+}
+
+
+def main(figs=None, concs=(20, 50, 80), ratios=(1.0, 2.0)) -> list[dict]:
+    rows = []
+    for fig, hw in HW_FIGS.items():
+        if figs and fig not in figs:
+            continue
+        for ratio in ratios:
+            for conc in concs:
+                for sched in SCHEDS:
+                    _, r = run_sim(sched, hw, conc=conc, cpu_ratio=ratio)
+                    rows.append(
+                        {
+                            "figure": fig,
+                            "hw": hw,
+                            "cpu_ratio": ratio,
+                            "concurrency": conc,
+                            "scheduler": sched,
+                            "tok_per_s": round(r.output_tok_per_s, 1),
+                            "steps_per_s": round(r.steps_per_s, 3),
+                            "ttft_avg_s": round(r.ttft_avg_s, 2),
+                            "ttft_p90_s": round(r.ttft_p90_s, 2),
+                            "gpu_util": round(r.gpu_util, 3),
+                            "hit_rate": round(r.cache_hit_rate, 3),
+                        }
+                    )
+    emit(rows, "fig7_9_single_replica.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 3: CDF of tool-call durations (heavy tail over 3+ orders)."""
+from __future__ import annotations
+
+from benchmarks.common import corpus, emit
+from repro.traces import percentile, phase_stats, tool_call_cdf
+
+
+def main() -> list[dict]:
+    c = corpus()
+    durs = tool_call_cdf(c)
+    st = phase_stats(c, 2.0)
+    rows = [
+        {
+            "figure": "fig3_tool_call_cdf",
+            "quantile": q,
+            "duration_s": round(percentile(durs, q), 3),
+        }
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999]
+    ]
+    rows.append(
+        {
+            "figure": "fig3_summary",
+            "quantile": "orders_of_magnitude",
+            "duration_s": round(st.orders_of_magnitude, 2),
+        }
+    )
+    emit(rows, "fig3_tool_call_cdf.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""MORI control plane: idleness metric, three-tier placement, typed eviction.
+
+This package is the paper's primary contribution (§4), implemented once and
+shared by the discrete-event simulator and the real JAX serving engine.
+"""
+from repro.core.baselines import SMGScheduler, TAOScheduler, TAScheduler
+from repro.core.idleness import IdlenessTracker
+from repro.core.program import ProgramState
+from repro.core.radix_tree import TypedRadixTree
+from repro.core.scheduler import AgentScheduler, EngineAdapter, MoriScheduler
+from repro.core.tiers import ReplicaTiers, WaitingQueue
+from repro.core.types import (
+    ProgramTrace,
+    RequestRecord,
+    SchedulerConfig,
+    Status,
+    Tier,
+    TierCapacity,
+    TypeLabel,
+)
+
+SCHEDULERS = {
+    "mori": MoriScheduler,
+    "ta": TAScheduler,
+    "ta+o": TAOScheduler,
+    "smg": SMGScheduler,
+}
+
+__all__ = [
+    "AgentScheduler",
+    "EngineAdapter",
+    "IdlenessTracker",
+    "MoriScheduler",
+    "ProgramState",
+    "ProgramTrace",
+    "ReplicaTiers",
+    "RequestRecord",
+    "SCHEDULERS",
+    "SMGScheduler",
+    "SchedulerConfig",
+    "Status",
+    "TAOScheduler",
+    "TAScheduler",
+    "Tier",
+    "TierCapacity",
+    "TypeLabel",
+    "TypedRadixTree",
+    "WaitingQueue",
+]

@@ -1,0 +1,63 @@
+"""Affinity-aware multi-replica placement (paper §4.1, §6.2.2).
+
+Affinity itself is structural in MORI: CPU-queue promotions go back to the
+replica whose DRAM holds the cache (enforced in the scheduler), so the
+balancer only places programs with *no* resident state — Waiting-queue
+returns and new arrivals — using the paper's most-available-capacity
+(Best-Fit-Decreasing style) rule.
+
+Beyond-paper (off by default): straggler mitigation. Replicas report an EWMA
+of step latency; with ``straggler_penalty > 0`` the effective free capacity
+of slow replicas is discounted, biasing new placements away from them.
+"""
+from __future__ import annotations
+
+from repro.core.program import ProgramState
+from repro.core.tiers import ReplicaTiers
+from repro.core.types import SchedulerConfig
+
+
+class ReplicaBalancer:
+    def __init__(self, replicas: list[ReplicaTiers], config: SchedulerConfig):
+        self.replicas = replicas
+        self.config = config
+        self._healthy: set[int] = {r.replica_id for r in replicas}
+
+    # ------------------------------------------------------------- health
+    def mark_failed(self, replica_id: int) -> None:
+        self._healthy.discard(replica_id)
+
+    def mark_recovered(self, replica_id: int) -> None:
+        self._healthy.add(replica_id)
+
+    def healthy(self) -> list[ReplicaTiers]:
+        return [r for r in self.replicas if r.replica_id in self._healthy]
+
+    # ---------------------------------------------------------- placement
+    def place(self, prog: ProgramState, now: float) -> int | None:
+        """Pick a replica for a program with no resident KV state.
+
+        Paper: 'Waiting-queue promotions use Best-Fit-Decreasing bin packing
+        across replicas, selecting the replica with the most available
+        capacity first.'
+        """
+        candidates = self.healthy()
+        if not candidates:
+            return None
+        scored = [(self._effective_free(r), r.replica_id) for r in candidates]
+        scored.sort(reverse=True)
+        best_free, best_id = scored[0]
+        if best_free < prog.kv_bytes:
+            return None
+        return best_id
+
+    def _effective_free(self, rep: ReplicaTiers) -> float:
+        free = float(rep.gpu_free())
+        penalty = self.config.straggler_penalty
+        if penalty > 0.0:
+            lat = [r.ewma_step_latency_s for r in self.healthy()]
+            med = sorted(lat)[len(lat) // 2] if lat else 0.0
+            if med > 0 and rep.ewma_step_latency_s > med:
+                slowdown = rep.ewma_step_latency_s / med - 1.0
+                free *= max(0.0, 1.0 - penalty * slowdown)
+        return free

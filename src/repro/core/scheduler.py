@@ -1,0 +1,503 @@
+"""MORI scheduling policy (paper §4.3): sticky rebalancing over three tiers.
+
+The scheduler is runtime-agnostic: it consumes program lifecycle events and
+emits placement actions through an :class:`EngineAdapter`. The discrete-event
+simulator (``repro.sim``) and the real JAX serving engine (``repro.serving``)
+both drive *this exact code* — the policy is implemented once.
+
+Event flow (runtime -> scheduler):
+    program_arrived -> request_arrived -> notify_inference_started
+      -> request_completed -> [tool call] -> request_arrived -> ...
+      -> program_finished
+    tick(now) runs the periodic control loop (default every 5 s).
+
+Action flow (scheduler -> runtime, via EngineAdapter):
+    forward(pid, replica, reload, recompute): release a gated request; the
+        runtime must first reload KV from host (reload=True) or re-prefill
+        the whole context (recompute=True) before decoding.
+    offload(pid, replica):   move the program's KV GPU -> CPU DRAM.
+    discard(pid, replica, tier): drop the KV from the given tier.
+    set_label(pid, replica, label): typed-offloading hint (paper §4.3.2).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Protocol
+
+from repro.core.balancer import ReplicaBalancer
+from repro.core.program import ProgramState
+from repro.core.tiers import ReplicaTiers, WaitingQueue
+from repro.core.types import (
+    SchedulerConfig,
+    Status,
+    Tier,
+    TierCapacity,
+    TypeLabel,
+)
+
+
+class EngineAdapter(Protocol):
+    """What the scheduler can ask a runtime to do."""
+
+    def forward(self, pid: str, replica: int, reload: bool, recompute: bool) -> None: ...
+    def offload(self, pid: str, replica: int) -> None: ...
+    def discard(self, pid: str, replica: int | None, tier: Tier) -> None: ...
+    def set_label(self, pid: str, replica: int | None, label: TypeLabel) -> None: ...
+
+
+class AgentScheduler(abc.ABC):
+    """Shared event API for MORI and all baselines (SMG / TA / TA+O)."""
+
+    name: str = "base"
+
+    def __init__(
+        self,
+        num_replicas: int,
+        capacity: TierCapacity,
+        adapter: EngineAdapter,
+        config: SchedulerConfig | None = None,
+    ):
+        self.config = config or SchedulerConfig()
+        self.adapter = adapter
+        self.replicas = [
+            ReplicaTiers(replica_id=i, capacity=capacity) for i in range(num_replicas)
+        ]
+        self.waiting = WaitingQueue()
+        self.programs: dict[str, ProgramState] = {}
+        self.balancer = ReplicaBalancer(self.replicas, self.config)
+        self._running: dict[int, set[str]] = {i: set() for i in range(num_replicas)}
+
+    # -------------------------------------------------------------- events
+    def program_arrived(self, pid: str, kv_bytes_per_token: int, now: float) -> ProgramState:
+        prog = ProgramState(pid, kv_bytes_per_token, arrived_at=now)
+        prog.set_window(self.config.idleness_window)
+        self.programs[pid] = prog
+        self.waiting.add(prog)
+        return prog
+
+    @abc.abstractmethod
+    def request_arrived(self, pid: str, input_tokens: int, now: float) -> None: ...
+
+    def notify_inference_started(self, pid: str, now: float) -> None:
+        prog = self.programs[pid]
+        prog.begin_reasoning(now)
+        if prog.replica is not None:
+            self._running[prog.replica].add(pid)
+
+    @abc.abstractmethod
+    def request_completed(self, pid: str, output_tokens: int, now: float) -> None: ...
+
+    def program_finished(self, pid: str, now: float) -> None:
+        prog = self.programs.pop(pid, None)
+        if prog is None:
+            return
+        prog.finished = True
+        if prog.replica is not None:
+            self._running[prog.replica].discard(pid)
+        self._release(prog)
+
+    @abc.abstractmethod
+    def tick(self, now: float) -> None: ...
+
+    # ------------------------------------------------------- fault handling
+    def replica_failed(self, replica_id: int, now: float) -> list[str]:
+        """Node failure: all KV on the replica is lost. Its programs drop to
+        the Waiting queue and will be re-admitted elsewhere via the normal
+        recompute path — exactly MORI's Waiting-tier semantics, which is what
+        makes the design restart-tolerant. Returns the affected program ids.
+        """
+        rep = self.replicas[replica_id]
+        affected: list[str] = []
+        for prog in list(rep.gpu.values()):
+            rep.gpu_remove(prog)
+            self.adapter.discard(prog.program_id, replica_id, Tier.GPU)
+            self.waiting.add(prog)
+            prog.metrics.evictions += 1
+            prog.dispatched = False  # any in-flight forward died with the node
+            prog.lazy_demote = False
+            affected.append(prog.program_id)
+        for prog in list(rep.cpu.values()):
+            rep.cpu_remove(prog)
+            self.adapter.discard(prog.program_id, replica_id, Tier.CPU)
+            self.waiting.add(prog)
+            prog.metrics.evictions += 1
+            prog.dispatched = False
+            affected.append(prog.program_id)
+        for prog in list(rep.ssd.values()):
+            rep.ssd_remove(prog)
+            self.adapter.discard(prog.program_id, replica_id, Tier.SSD)
+            self.waiting.add(prog)
+            prog.metrics.evictions += 1
+            prog.dispatched = False
+            affected.append(prog.program_id)
+        for pid in list(self._running[replica_id]):
+            self._running[replica_id].discard(pid)
+            prog = self.programs.get(pid)
+            if prog is not None and not prog.finished:
+                prog.gate(now)  # in-flight request will be re-issued
+        self.balancer.mark_failed(replica_id)
+        return affected
+
+    def replica_recovered(self, replica_id: int) -> None:
+        self.balancer.mark_recovered(replica_id)
+
+    # ------------------------------------------------------------- queries
+    def replica_of(self, pid: str) -> int | None:
+        prog = self.programs.get(pid)
+        return prog.replica if prog else None
+
+    def running_count(self, replica: int) -> int:
+        return len(self._running[replica])
+
+    # ------------------------------------------------------------ plumbing
+    def _release(self, prog: ProgramState) -> None:
+        """Drop a program's KV from wherever it lives."""
+        for rep in self.replicas:
+            if prog.program_id in rep.gpu:
+                rep.gpu_remove(prog)
+                self.adapter.discard(prog.program_id, rep.replica_id, Tier.GPU)
+            if prog.program_id in rep.cpu:
+                rep.cpu_remove(prog)
+                self.adapter.discard(prog.program_id, rep.replica_id, Tier.CPU)
+            if prog.program_id in rep.ssd:
+                rep.ssd_remove(prog)
+                self.adapter.discard(prog.program_id, rep.replica_id, Tier.SSD)
+        self.waiting.remove(prog)
+        prog.tier = Tier.NONE
+        prog.replica = None
+
+    def _account_growth(self, prog: ProgramState, new_tokens: int) -> None:
+        if new_tokens <= 0:
+            return
+        if prog.replica is not None:
+            self.replicas[prog.replica].grow(prog, new_tokens)
+        prog.context_tokens += new_tokens
+
+    def _set_label(self, prog: ProgramState, label: TypeLabel) -> None:
+        if prog.label is not label:
+            prog.label = label
+            self.adapter.set_label(prog.program_id, prog.replica, label)
+
+    def _mark_not_running(self, prog: ProgramState) -> None:
+        if prog.replica is not None:
+            self._running[prog.replica].discard(prog.program_id)
+
+
+class MoriScheduler(AgentScheduler):
+    """The paper's scheduler: windowed idleness + sticky three-tier placement."""
+
+    name = "mori"
+
+    # ------------------------------------------------------------- events
+    def request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
+        prog = self.programs[pid]
+        new_tokens = max(0, input_tokens - prog.context_tokens)
+        self._account_growth(prog, new_tokens)
+        prog.gate(now)
+        if prog.tier is Tier.GPU and self._has_slot(prog.replica):
+            self._dispatch(prog, reload=False, recompute=False)
+        elif self.config.eager_promote:
+            self._promote_pass(now)
+
+    def request_completed(self, pid: str, output_tokens: int, now: float) -> None:
+        prog = self.programs[pid]
+        self._mark_not_running(prog)
+        self._account_growth(prog, 0)  # growth applied below via begin_acting
+        if prog.replica is not None:
+            self.replicas[prog.replica].grow(prog, output_tokens)
+        prog.begin_acting(now, new_tokens=output_tokens)
+        if prog.lazy_demote and prog.tier is Tier.GPU:
+            prog.lazy_demote = False
+            self._demote(prog, now)
+        if self.config.eager_promote:
+            self._promote_pass(now)
+
+    def tick(self, now: float) -> None:
+        for rep in self.replicas:
+            self._demote_pass(rep, now)
+            self._cpu_overflow_pass(rep, now)
+            self._ssd_overflow_pass(rep, now)
+        self._promote_pass(now)
+        self._sync_labels()
+
+    # ---------------------------------------------------------- demotions
+    def _demote_pass(self, rep: ReplicaTiers, now: float) -> None:
+        """Shrink the GPU queue until it fits (paper §4.3.1 'Demotion')."""
+        overflow = rep.gpu_overflow()
+        if overflow <= 0:
+            return
+        # Acting (and gated) programs first, then Reasoning; within a status
+        # class, highest idleness first.
+        order = {Status.ACTING: 0, Status.GATED: 1, Status.REASONING: 2}
+        victims = sorted(
+            rep.gpu.values(),
+            key=lambda p: (order[p.status], -p.idleness(now)),
+        )
+        pending_free = 0
+        for victim in victims:
+            if rep.gpu_used - pending_free <= rep.capacity.gpu_kv_bytes:
+                break
+            if victim.status is Status.REASONING:
+                # lazy demotion: finish the in-flight step first
+                if not victim.lazy_demote:
+                    victim.lazy_demote = True
+                    pending_free += victim.kv_bytes
+            else:
+                self._demote(victim, now)
+
+    def _demote(self, prog: ProgramState, now: float) -> None:
+        """GPU -> CPU if DRAM permits, else SSD (§7.1 extension, when
+        enabled), else GPU -> Waiting."""
+        rep = self.replicas[prog.replica]
+        rep.gpu_remove(prog)
+        prog.metrics.demotions += 1
+        if rep.cpu_free() >= prog.kv_bytes:
+            rep.cpu_admit(prog)
+            self.adapter.offload(prog.program_id, rep.replica_id)
+            self._set_label(prog, TypeLabel.IDLE)
+        elif rep.ssd_free() >= prog.kv_bytes and self._ssd_worthwhile(prog):
+            rep.ssd_admit(prog)
+            self.adapter.offload(prog.program_id, rep.replica_id)
+            self._set_label(prog, TypeLabel.IDLE)
+        else:
+            self.adapter.discard(prog.program_id, rep.replica_id, Tier.GPU)
+            self.waiting.add(prog)
+            prog.metrics.evictions += 1
+            self._set_label(prog, TypeLabel.INACTIVE)
+
+    def _cpu_overflow_pass(self, rep: ReplicaTiers, now: float) -> None:
+        """CPU-side admission control (paper §3.4).
+
+        With the SSD tier enabled (§7.1 extension), the *most idle* CPU
+        programs sink to NVMe first — they tolerate the slower reload and
+        continue the idleness spectrum downward. Whatever still overflows
+        is evicted to Waiting, busiest first, mirroring the typed block
+        order (the CPU tier preferentially *retains idle* programs).
+        """
+        if rep.cpu_overflow() <= 0:
+            return
+        if rep.capacity.ssd_kv_bytes:
+            sinkable = sorted(rep.cpu.values(), key=lambda p: -p.idleness(now))
+            for victim in sinkable:
+                if rep.cpu_overflow() <= 0:
+                    return
+                if rep.ssd_free() < victim.kv_bytes:
+                    break
+                if not self._ssd_worthwhile(victim):
+                    continue
+                rep.cpu_remove(victim)
+                rep.ssd_admit(victim)
+                self.adapter.offload(victim.program_id, rep.replica_id)
+                self._set_label(victim, TypeLabel.IDLE)
+        victims = sorted(rep.cpu.values(), key=lambda p: p.idleness(now))
+        for victim in victims:
+            if rep.cpu_overflow() <= 0:
+                break
+            rep.cpu_remove(victim)
+            self.adapter.discard(victim.program_id, rep.replica_id, Tier.CPU)
+            self.waiting.add(victim)
+            victim.metrics.evictions += 1
+            self._set_label(victim, TypeLabel.INACTIVE)
+
+    def _ssd_worthwhile(self, prog: ProgramState) -> bool:
+        """Cost-aware SSD guard (beyond §7.1's threshold proposal): keep
+        the bytes only if an NVMe reload would beat recomputing them.
+        Without configured rates, always sink (the paper-naive policy)."""
+        cfg = self.config
+        if not cfg.ssd_bytes_per_s or not cfg.recompute_tok_per_s:
+            return True
+        reload_s = prog.kv_bytes / cfg.ssd_bytes_per_s
+        recompute_s = prog.context_tokens / cfg.recompute_tok_per_s
+        return reload_s < cfg.ssd_guard_factor * recompute_s
+
+    def _ssd_overflow_pass(self, rep: ReplicaTiers, now: float) -> None:
+        """SSD-side admission control (§7.1 extension): evict to Waiting,
+        busiest first (they will be recomputed soon regardless; the most
+        idle keep their bytes where idleness is cheapest)."""
+        if rep.ssd_overflow() <= 0:
+            return
+        victims = sorted(rep.ssd.values(), key=lambda p: p.idleness(now))
+        for victim in victims:
+            if rep.ssd_overflow() <= 0:
+                break
+            rep.ssd_remove(victim)
+            self.adapter.discard(victim.program_id, rep.replica_id, Tier.SSD)
+            self.waiting.add(victim)
+            victim.metrics.evictions += 1
+            self._set_label(victim, TypeLabel.INACTIVE)
+
+    # ---------------------------------------------------------- promotions
+    def _promote_pass(self, now: float) -> None:
+        """Fill free GPU capacity in priority order (paper §4.3.1).
+
+        (1) CPU-queue programs whose tool call has completed (gated), with
+            replica affinity; (2) Waiting-queue gated programs, returning
+            before new, via most-available-capacity placement; (3) new
+            arrivals, smallest context first. Lowest idleness first within
+            (1) and (2).
+        """
+        # --- P1: CPU -> GPU, affinity-preserving
+        p1 = [
+            p
+            for rep in self.replicas
+            for p in rep.cpu.values()
+            if p.has_pending and not p.dispatched
+        ]
+        p1.sort(key=lambda p: p.idleness(now))
+        for prog in p1:
+            self._try_promote_cpu(prog, now)
+
+        # --- P1b: SSD -> GPU (§7.1 extension), affinity-preserving; reload
+        #     is NVMe-speed (the runtime reads prog.tier before forward)
+        p1b = [
+            p
+            for rep in self.replicas
+            for p in rep.ssd.values()
+            if p.has_pending and not p.dispatched
+        ]
+        p1b.sort(key=lambda p: p.idleness(now))
+        for prog in p1b:
+            self._try_promote_ssd(prog, now)
+
+        # --- P2: Waiting (returning) -> some replica
+        p2 = [
+            p
+            for p in self.waiting.programs.values()
+            if p.has_pending and not p.is_new and not p.dispatched
+        ]
+        p2.sort(key=lambda p: p.idleness(now))
+        for prog in p2:
+            self._try_admit_waiting(prog, now)
+
+        # --- P3: new arrivals, smallest context first
+        p3 = [
+            p
+            for p in self.waiting.programs.values()
+            if p.has_pending and p.is_new and not p.dispatched
+        ]
+        p3.sort(key=lambda p: p.context_tokens)
+        for prog in p3:
+            self._try_admit_waiting(prog, now)
+
+        # forward GPU-resident gated programs when slots free (busy first)
+        for rep in self.replicas:
+            gated = [
+                p
+                for p in rep.gpu.values()
+                if p.status is Status.GATED and p.has_pending and not p.dispatched
+            ]
+            gated.sort(key=lambda p: p.idleness(now))
+            for prog in gated:
+                if not self._has_slot(rep.replica_id):
+                    break
+                self._dispatch(prog, reload=False, recompute=False)
+
+    def _try_promote_cpu(self, prog: ProgramState, now: float) -> bool:
+        rep = self.replicas[prog.replica]
+        if not self._make_room(rep, prog, now):
+            return False
+        rep.cpu_remove(prog)
+        rep.gpu_admit(prog)
+        prog.metrics.promotions += 1
+        self._set_label(prog, TypeLabel.BUSY)
+        if self._has_slot(rep.replica_id):
+            self._dispatch(prog, reload=True, recompute=False)
+        return True
+
+    def _try_promote_ssd(self, prog: ProgramState, now: float) -> bool:
+        rep = self.replicas[prog.replica]
+        if not self._make_room(rep, prog, now):
+            return False
+        rep.ssd_remove(prog)
+        prog.reload_src = Tier.SSD
+        rep.gpu_admit(prog)
+        prog.metrics.promotions += 1
+        self._set_label(prog, TypeLabel.BUSY)
+        if self._has_slot(rep.replica_id):
+            self._dispatch(prog, reload=True, recompute=False)
+        return True
+
+    def _try_admit_waiting(self, prog: ProgramState, now: float) -> bool:
+        target = self.balancer.place(prog, now)
+        if target is None:
+            return False
+        rep = self.replicas[target]
+        if not self._make_room(rep, prog, now, allow_swap=not prog.is_new):
+            return False
+        self.waiting.remove(prog)
+        if prog.home_replica is not None and prog.home_replica != target:
+            prog.metrics.replica_switches += 1
+        rep.gpu_admit(prog)
+        prog.metrics.promotions += 1
+        prog.metrics.recomputed_tokens += prog.context_tokens
+        self._set_label(prog, TypeLabel.BUSY)
+        if self._has_slot(rep.replica_id):
+            self._dispatch(prog, reload=False, recompute=True)
+        return True
+
+    def _make_room(
+        self,
+        rep: ReplicaTiers,
+        prog: ProgramState,
+        now: float,
+        allow_swap: bool = True,
+    ) -> bool:
+        """Ensure ``prog.kv_bytes`` fit on ``rep``'s GPU tier.
+
+        Sticky placement: only displaces *Acting* GPU programs that are more
+        idle than the candidate by at least the hysteresis margin — the
+        'actual mismatch' rule of paper §4.3.
+        """
+        need = prog.kv_bytes - rep.gpu_free()
+        if need <= 0:
+            return True
+        if not allow_swap:
+            return False
+        margin = self.config.swap_hysteresis
+        cand_iota = prog.idleness(now)
+        displaceable = sorted(
+            (
+                p
+                for p in rep.gpu.values()
+                if p.status is Status.ACTING
+                and not p.lazy_demote
+                and p.idleness(now) > cand_iota + margin
+            ),
+            key=lambda p: -p.idleness(now),
+        )
+        freed = 0
+        chosen: list[ProgramState] = []
+        for victim in displaceable:
+            if freed >= need:
+                break
+            chosen.append(victim)
+            freed += victim.kv_bytes
+        if freed < need:
+            return False
+        for victim in chosen:
+            self._demote(victim, now)
+        return True
+
+    # ------------------------------------------------------------ dispatch
+    def _has_slot(self, replica: int | None) -> bool:
+        if replica is None:
+            return False
+        cap = self.config.max_running
+        return cap is None or len(self._running[replica]) < cap
+
+    def _dispatch(self, prog: ProgramState, reload: bool, recompute: bool) -> None:
+        if reload:
+            prog.metrics.reloaded_bytes += prog.kv_bytes
+        prog.dispatched = True
+        self.adapter.forward(prog.program_id, prog.replica, reload, recompute)
+
+    def _sync_labels(self) -> None:
+        for rep in self.replicas:
+            for p in rep.gpu.values():
+                self._set_label(p, TypeLabel.BUSY)
+            for p in rep.cpu.values():
+                self._set_label(p, TypeLabel.IDLE)
+            for p in rep.ssd.values():
+                self._set_label(p, TypeLabel.IDLE)
+        for p in self.waiting.programs.values():
+            self._set_label(p, TypeLabel.INACTIVE)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving/compute hot-spots, each with a jnp
+oracle (ref.py) and a jit'd dispatcher (ops.py). Validated in interpret
+mode on CPU; TPU is the compilation target."""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.ssd.ops import ssd
+
+__all__ = ["flash_attention", "paged_attention", "ssd"]

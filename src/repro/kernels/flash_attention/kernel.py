@@ -1,0 +1,153 @@
+"""Pallas TPU flash-attention prefill kernel.
+
+Causal/bidirectional online-softmax attention with GQA, optional sliding
+window (gemma2 local layers) and logit softcap. VMEM-tiled with
+(q_block, head_dim) x (kv_block, head_dim) tiles feeding the MXU; fully
+masked kv-blocks are skipped via ``pl.when`` on the *grid*, so the causal
+lower-triangle costs ~half the FLOPs of the dense product (the HLO-level
+blockwise fallback cannot skip — this is the kernel's main win besides
+fusion).
+
+Layouts:
+    q   [B, H, Sq, D]
+    k,v [B, KH, Skv, D]
+    out [B, H, Sq, D]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(
+    q_ref,                # [1, 1, qb, D]
+    k_ref,                # [1, 1, kb, D]
+    v_ref,                # [1, 1, kb, D]
+    o_ref,                # [1, 1, qb, D]
+    m_scr,                # [qb, 1] f32
+    l_scr,                # [qb, 1] f32
+    acc_scr,              # [qb, D] f32
+    *,
+    q_block: int,
+    kv_block: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + qi * q_block
+    k_start = ki * kv_block
+
+    # block-level skip conditions (structural zeros)
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (q_start + q_block - 1 >= k_start)
+    if window is not None:
+        live = live & (k_start + kv_block - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(F32)                            # [qb, D]
+        D = q.shape[-1]
+        k = k_ref[0, 0].astype(F32)                            # [kb, D]
+        v = v_ref[0, 0].astype(F32)
+        s = jax.lax.dot_general(                               # [qb, kb]
+            q * (D ** -0.5), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=F32,
+        )
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = jnp.bool_(True)
+        if causal:
+            mask = mask & (qpos >= kpos)
+        if window is not None:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_scr[...]                                    # [qb, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=F32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "q_block", "kv_block", "q_offset",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,   # [B, H, Sq, D]
+    k: jax.Array,   # [B, KH, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    assert Sq % qb == 0 and Skv % kb == 0
+    grid = (B, H, Sq // qb, Skv // kb)
+    kern = functools.partial(
+        _kernel,
+        q_block=qb,
+        kv_block=kb,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kb, D), lambda b, h, i, j, g=G: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, kb, D), lambda b, h, i, j, g=G: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, D), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), F32),
+            pltpu.VMEM((qb, 1), F32),
+            pltpu.VMEM((qb, D), F32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

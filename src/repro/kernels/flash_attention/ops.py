@@ -1,0 +1,18 @@
+"""Public entry point: Pallas flash attention on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref as _ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None, q_offset=0):
+    if jax.default_backend() == "tpu":
+        return _pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset,
+        )
+    return _ref(
+        q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+    )

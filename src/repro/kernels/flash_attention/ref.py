@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (dense masked softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def flash_attention_ref(
+    q, k, v, *, causal=True, window=None, softcap=None, q_offset=0
+):
+    """q [B,H,Sq,D]; k,v [B,KH,Skv,D] -> [B,H,Sq,D]."""
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = q.reshape(B, KH, G, Sq, D).astype(F32) * (D ** -0.5)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(F32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(F32))
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,149 @@
+"""Pallas TPU paged-attention decode kernel.
+
+The serving hot-spot MORI's placement feeds: one new query token per
+sequence attends over a *paged* KV pool through a block-table indirection.
+
+TPU adaptation (vs. the CUDA PagedAttention of vLLM): instead of per-warp
+gather loops, the block table is **scalar-prefetched** and drives the
+``BlockSpec`` index_map — the Pallas pipeline DMAs exactly the right
+(page_tokens, head_dim) KV tile from HBM into VMEM for every grid step, so
+the gather *is* the pipeline (no scatter/gather ALU work, MXU-friendly
+tiles). Online-softmax accumulators live in VMEM scratch and persist across
+the sequential page-grid dimension.
+
+Layouts:
+    q            [B, H, D]           (one decode token per sequence)
+    k_pages      [N_pages, T, KH, D] (T = page_tokens)
+    v_pages      [N_pages, T, KH, D]
+    block_tables [B, P]   int32      (P = max pages per sequence)
+    lengths      [B]      int32      (valid context incl. current token)
+    out          [B, H, D]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(
+    # scalar-prefetch refs
+    tables_ref,          # [B, P] int32
+    lengths_ref,         # [B] int32
+    # inputs
+    q_ref,               # [1, H, D]
+    k_ref,               # [1, T, KH, D]   (page selected by index_map)
+    v_ref,               # [1, T, KH, D]
+    # output
+    o_ref,               # [1, H, D]
+    # scratch
+    m_scr,               # [KH, G]      f32
+    l_scr,               # [KH, G]      f32
+    acc_scr,             # [KH, G, D]   f32
+    *,
+    page_tokens: int,
+    kv_heads: int,
+    q_per_kv: int,
+    softcap: float | None,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_pages = pl.num_programs(1)
+    T = page_tokens
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    @pl.when(p * T < length)
+    def _compute():
+        q = q_ref[0].astype(F32)                               # [H, D]
+        D = q.shape[-1]
+        q = q.reshape(kv_heads, q_per_kv, D) * (D ** -0.5)
+        k = k_ref[0].astype(F32)                               # [T, KH, D]
+        v = v_ref[0].astype(F32)
+        s = jax.lax.dot_general(                               # [KH, G, T]
+            q,
+            k.transpose(1, 2, 0),                              # [KH, D, T]
+            ((( 2,), (1,)), ((0,), (0,))),
+            preferred_element_type=F32,
+        )
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = p * T + jax.lax.broadcasted_iota(jnp.int32, (1, 1, T), 2)
+        s = jnp.where(pos < length, s, -1e30)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_scr[...] = l_scr[...] * alpha + pexp.sum(axis=-1)
+        pv = jax.lax.dot_general(                              # [KH, G, D]
+            pexp,
+            v.transpose(1, 0, 2),                              # [KH, T, D]
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=F32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        out = acc_scr[...] / denom                             # [KH, G, D]
+        o_ref[0] = out.reshape(kv_heads * q_per_kv, -1).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "interpret")
+)
+def paged_attention(
+    q: jax.Array,            # [B, H, D]
+    k_pages: jax.Array,      # [N, T, KH, D]
+    v_pages: jax.Array,      # [N, T, KH, D]
+    block_tables: jax.Array, # [B, P] int32
+    lengths: jax.Array,      # [B] int32
+    *,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    N, T, KH, _ = k_pages.shape
+    P = block_tables.shape[1]
+    G = H // KH
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, p, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec((1, T, KH, D), lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, T, KH, D), lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, tbl, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KH, G), F32),
+            pltpu.VMEM((KH, G), F32),
+            pltpu.VMEM((KH, G, D), F32),
+        ],
+    )
+    kern = functools.partial(
+        _kernel,
+        page_tokens=T,
+        kv_heads=KH,
+        q_per_kv=G,
+        softcap=softcap,
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)

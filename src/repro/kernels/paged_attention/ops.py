@@ -1,0 +1,19 @@
+"""Public entry point: Pallas kernel on TPU, oracle fallback elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref as _ref
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, softcap=None):
+    """Decode attention over a paged KV pool (see kernel.py for layouts)."""
+    platform = jax.default_backend()
+    if platform == "tpu":
+        return _pallas(
+            q, k_pages, v_pages, block_tables, lengths, softcap=softcap
+        )
+    # CPU/GPU: interpret the kernel for tiny shapes is too slow in prod paths;
+    # use the jnp oracle (identical semantics, validated in tests).
+    return _ref(q, k_pages, v_pages, block_tables, lengths, softcap=softcap)

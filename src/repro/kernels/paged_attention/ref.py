@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention: gather pages densely, run
+masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, softcap=None):
+    B, H, D = q.shape
+    N, T, KH, _ = k_pages.shape
+    P = block_tables.shape[1]
+    G = H // KH
+    # dense gather: [B, P*T, KH, D]
+    k = k_pages[block_tables].reshape(B, P * T, KH, D).astype(F32)
+    v = v_pages[block_tables].reshape(B, P * T, KH, D).astype(F32)
+    qf = q.reshape(B, KH, G, D).astype(F32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(P * T)[None, :]
+    mask = pos < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(B, H, D).astype(q.dtype)

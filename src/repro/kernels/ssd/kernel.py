@@ -1,0 +1,131 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the chunk axis is
+the *sequential minor grid dimension* so the running inter-chunk state lives
+in a VMEM scratch accumulator ([P, N] f32 per (batch, head)) — the TPU
+analogue of the CUDA implementation's cross-block state passing. The
+intra-chunk quadratic term and the state update are both MXU matmuls over
+(Q, P)/(Q, N) tiles.
+
+Host-side layouts (pre-chunked):
+    x   [B, C, Q, H, P]     dt [B, C, Q, H]     A [H]
+    Bm  [B, C, Q, N]        Cm [B, C, Q, N]     (single B/C group)
+    y   [B, C, Q, H, P]     final_state [B, H, P, N]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(
+    x_ref,      # [1, 1, Q, 1, P]
+    dt_ref,     # [1, 1, Q, 1]
+    a_ref,      # [1]
+    b_ref,      # [1, 1, Q, N]
+    c_ref,      # [1, 1, Q, N]
+    y_ref,      # [1, 1, Q, 1, P]
+    st_ref,     # [1, 1, P, N]  (final state out)
+    state_scr,  # [P, N] f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+    Q = chunk
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, :, 0, :].astype(F32)                       # [Q, P]
+    dt = dt_ref[0, 0, :, :].astype(F32)                        # [Q, 1]
+    A = a_ref[0].astype(F32)
+    Bm = b_ref[0, 0].astype(F32)                               # [Q, N]
+    Cm = c_ref[0, 0].astype(F32)                               # [Q, N]
+
+    dA = dt * A                                                # [Q, 1]
+    cum = jnp.cumsum(dA, axis=0)                               # [Q, 1]
+    total = cum[Q - 1, 0]
+
+    # intra-chunk attention-like term
+    li = cum                                                   # [Q,1]
+    lj = cum.reshape(1, Q)                                     # [1,Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(li - lj), 0.0)             # [Q,Q]
+    scores = (
+        jax.lax.dot(Cm, Bm.T, preferred_element_type=F32) * L
+    )                                                          # [Q,Q]
+    xdt = x * dt                                               # [Q,P]
+    y = jax.lax.dot(scores, xdt, preferred_element_type=F32)   # [Q,P]
+
+    # inter-chunk contribution from the carried state
+    state = state_scr[...]                                     # [P,N]
+    c_decay = Cm * jnp.exp(cum)                                # [Q,N]
+    y = y + jax.lax.dot(c_decay, state.T, preferred_element_type=F32)
+
+    # state update: state' = state * exp(total) + xdt^T (Bm * decay_to_end)
+    decay_end = jnp.exp(total - cum)                           # [Q,1]
+    state_scr[...] = state * jnp.exp(total) + jax.lax.dot(
+        xdt.T, Bm * decay_end, preferred_element_type=F32
+    )
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        st_ref[0, 0] = state_scr[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H]  (post-softplus)
+    A: jax.Array,    # [H]
+    Bm: jax.Array,   # [B, S, 1, N] or [B, S, N]
+    Cm: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    if Bm.ndim == 4:
+        Bm = Bm[:, :, 0, :]
+        Cm = Cm[:, :, 0, :]
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    C = S // chunk
+    xr = x.reshape(B, C, chunk, H, P)
+    dtr = dt.reshape(B, C, chunk, H)
+    br = Bm.reshape(B, C, chunk, N)
+    cr = Cm.reshape(B, C, chunk, N)
+    grid = (B, H, C)
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, chunk, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), F32)],
+        interpret=interpret,
+    )(xr, dtr, A, br, cr)
+    return y.reshape(B, S, H, P), st

@@ -1,0 +1,16 @@
+"""Public entry point: Pallas SSD on TPU, chunked-jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd as _pallas
+from repro.kernels.ssd.ref import ssd_reference as _ref
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    """Mamba-2 SSD scan. x [B,S,H,P]; B/C [B,S,1,N] (single group)."""
+    if jax.default_backend() == "tpu":
+        return _pallas(x, dt, A, Bm, Cm, chunk=chunk)
+    if Bm.ndim == 3:
+        Bm, Cm = Bm[:, :, None, :], Cm[:, :, None, :]
+    return _ref(x, dt, A, Bm, Cm, chunk=chunk)

@@ -1,0 +1,156 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) scan.
+
+Implements the chunked block decomposition of Dao & Gu, "Transformers are
+SSMs" (arXiv:2405.21060, Algorithm 1 / SSD): within-chunk attention-like
+term + between-chunk low-rank state recurrence. This file is the single
+source of truth: the model's portable path calls it, and the Pallas kernel
+(`ssd/kernel.py`) is validated against it in interpret mode.
+
+Shapes (h = heads, p = head dim, n = state dim, g = B/C groups):
+    x  : [b, s, h, p]
+    dt : [b, s, h]       (post-softplus, >= 0)
+    A  : [h]             (negative reals; decay = exp(dt * A))
+    B  : [b, s, g, n]
+    C  : [b, s, g, n]
+returns
+    y          : [b, s, h, p]
+    final_state: [b, h, p, n]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(t: jax.Array, h: int) -> jax.Array:
+    """[b, s, g, n] -> [b, s, h, n] by repeating each group over its heads."""
+    g = t.shape[2]
+    assert h % g == 0, (h, g)
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def ssd_reference(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,
+):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk != 0:
+        # zero-pad to a chunk multiple: dt=0 -> decay 1, x=0 -> no update
+        pad = chunk - s % chunk
+        y, st = ssd_reference(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            chunk=chunk,
+            initial_state=initial_state,
+        )
+        return y[:, :s], st
+    c = s // chunk
+    f32 = jnp.float32
+
+    Bh = _expand_groups(B, h).astype(f32)
+    Ch = _expand_groups(C, h).astype(f32)
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    dA = dtf * A.astype(f32)[None, None, :]                    # [b,s,h]
+
+    # chunked views
+    xq = xf.reshape(b, c, chunk, h, p)
+    dtq = dtf.reshape(b, c, chunk, h)
+    dAq = dA.reshape(b, c, chunk, h)
+    Bq = Bh.reshape(b, c, chunk, h, n)
+    Cq = Ch.reshape(b, c, chunk, h, n)
+
+    cum = jnp.cumsum(dAq, axis=2)                              # [b,c,q,h]
+    total = cum[:, :, -1, :]                                   # [b,c,h]
+
+    # ---- intra-chunk (the "attention-like" quadratic term)
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    li = cum[:, :, :, None, :]                                 # [b,c,q,1,h]
+    lj = cum[:, :, None, :, :]                                 # [b,c,1,q,h]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cq, Bq) * L      # [b,c,q,k,h]
+    xdt = xq * dtq[..., None]                                  # [b,c,q,h,p]
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xdt)
+
+    # ---- per-chunk states: sum_k exp(total - cum_k) * B_k (x)dt_k
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)         # [b,c,q,h]
+    chunk_states = jnp.einsum(
+        "bcqhn,bcqhp->bchpn", Bq * decay_to_end[..., None], xdt
+    )                                                          # [b,c,h,p,n]
+
+    # ---- inter-chunk recurrence over chunk states
+    decay_chunk = jnp.exp(total)                               # [b,c,h]
+    if initial_state is None:
+        init = jnp.zeros((b, h, p, n), f32)
+    else:
+        init = initial_state.astype(f32)
+
+    def scan_fn(carry, inp):
+        st, dc = inp                                           # [b,h,p,n], [b,h]
+        new = carry * dc[:, :, None, None] + st
+        return new, carry                                      # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (
+            jnp.moveaxis(chunk_states, 1, 0),                  # [c,b,h,p,n]
+            jnp.moveaxis(decay_chunk, 1, 0),                   # [c,b,h]
+        ),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # [b,c,h,p,n]
+
+    # ---- inter-chunk contribution: C_q exp(cum_q) @ state_before_chunk
+    y_off = jnp.einsum(
+        "bcqhn,bchpn->bcqhp", Cq * jnp.exp(cum)[..., None], prev_states
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: jax.Array,   # [b, h, p, n]
+    x: jax.Array,       # [b, h, p]
+    dt: jax.Array,      # [b, h]
+    A: jax.Array,       # [h]
+    B: jax.Array,       # [b, g, n]
+    C: jax.Array,       # [b, g, n]
+):
+    """One-token recurrent update: h' = exp(dt*A) h + dt * x (x) B; y = C h'."""
+    b, h, p, n = state.shape
+    f32 = jnp.float32
+    Bh = jnp.repeat(B, h // B.shape[1], axis=1).astype(f32)    # [b,h,n]
+    Ch = jnp.repeat(C, h // C.shape[1], axis=1).astype(f32)
+    decay = jnp.exp(dt.astype(f32) * A.astype(f32)[None, :])   # [b,h]
+    upd = (dt.astype(f32)[..., None] * x.astype(f32))[..., None] * Bh[:, :, None, :]
+    new_state = state * decay[:, :, None, None] + upd          # [b,h,p,n]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+def ssd_naive(x, dt, A, B, C, *, initial_state=None):
+    """O(s) sequential scan — the ground-truth oracle for tiny shapes."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,217 @@
+"""Cell builders: (architecture x input-shape) -> jitted, shardable step.
+
+``train_4k`` lowers ``train_step`` (fwd + loss + grad + AdamW, donated);
+``prefill_32k`` lowers ``prefill_step``; ``decode_32k``/``long_500k`` lower
+``serve_step`` (one new token over a full KV cache). All inputs are
+ShapeDtypeStructs — nothing here allocates device memory (dry-run contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (
+    ShardingRules,
+    make_decode_rules,
+    make_train_rules,
+)
+from repro.models import Model, ShardCtx, abstract
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.params import Leaf, is_leaf, sharding_tree, spec_tree
+from repro.train.optimizer import adamw_update, describe_opt_state
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    jitted: object
+    args: tuple
+    rules: ShardingRules
+    meta: dict = field(default_factory=dict)
+
+    def lower(self):
+        return self.jitted.lower(*self.args)
+
+
+# --------------------------------------------------------------- batch specs
+def batch_abstract(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+    return out
+
+
+def batch_specs(batch: dict, mesh, rules: ShardingRules) -> dict:
+    out = {}
+    for k, v in batch.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = rules.sharding(mesh, logical, v.shape)
+    return out
+
+
+# ---------------------------------------------------------------- cell build
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    sequence_parallel: bool = False,
+    window_limited_cache: bool = False,
+    pad_heads: bool = False,
+) -> Cell:
+    from dataclasses import replace
+
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    if pad_heads:
+        # §Perf lever: pad q heads up to the model-axis size so attention
+        # shards instead of falling back to replicated (arctic: 56 -> 64).
+        # Numerically exact given the checkpoint-load layout: pad heads are
+        # inserted per GQA group (zero wq columns / wo rows in each group's
+        # pad slots — see tests/test_attention_opts.py); the zero heads'
+        # attention output projects to nothing.
+        tp = mesh.shape["model"]
+        padded = -(-cfg.num_heads // tp) * tp
+        if padded != cfg.num_heads:
+            cfg = replace(cfg, num_heads=padded)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    param_tree = model.describe()
+
+    if shape.kind == "train":
+        return _build_train(arch, cfg, model, param_tree, shape, mesh,
+                            sequence_parallel)
+    if shape.kind == "prefill":
+        return _build_prefill(arch, cfg, model, param_tree, shape, mesh)
+    return _build_serve(arch, cfg, model, param_tree, shape, mesh,
+                        window_limited_cache)
+
+
+def _build_train(arch, cfg, model, param_tree, shape, mesh, sp):
+    rules = make_train_rules(mesh, sequence_parallel=sp)
+    ctx = ShardCtx(mesh, rules)
+    opt_tree = describe_opt_state(param_tree, bf16_moments=cfg.bf16_moments)
+    batch = batch_abstract(cfg, shape)
+
+    p_specs = sharding_tree(param_tree, mesh, rules)
+    o_specs = sharding_tree(opt_tree, mesh, rules)
+    b_specs = batch_specs(batch, mesh, rules)
+    scalar = NamedSharding(mesh, P())
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, ctx)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt = adamw_update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_specs, o_specs, b_specs),
+        out_shardings=(p_specs, o_specs, scalar),
+        donate_argnums=(0, 1),
+    )
+    return Cell(
+        arch, shape.name, "train", jitted,
+        (abstract(param_tree), abstract(opt_tree), batch), rules,
+        meta={"tokens_per_step": shape.global_batch * shape.seq_len},
+    )
+
+
+def _build_prefill(arch, cfg, model, param_tree, shape, mesh):
+    rules = make_decode_rules(mesh, max(1, cfg.num_kv_heads))
+    ctx = ShardCtx(mesh, rules)
+    batch = batch_abstract(cfg, shape)
+    p_specs = sharding_tree(param_tree, mesh, rules)
+    b_specs = batch_specs(batch, mesh, rules)
+    cache_tree = model.describe_cache(shape.global_batch, shape.seq_len)
+    c_specs = sharding_tree(cache_tree, mesh, rules)
+    logits_spec = rules.sharding(
+        mesh, ("batch", "vocab_act"), (shape.global_batch, cfg.vocab_size)
+    )
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(p_specs, b_specs),
+        out_shardings=(logits_spec, c_specs),
+    )
+    return Cell(
+        arch, shape.name, "prefill", jitted, (abstract(param_tree), batch), rules,
+        meta={"tokens_per_step": shape.global_batch * shape.seq_len},
+    )
+
+
+def _build_serve(arch, cfg, model, param_tree, shape, mesh, window_limited):
+    rules = make_decode_rules(mesh, max(1, cfg.num_kv_heads))
+    ctx = ShardCtx(mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    cache_tree = model.describe_cache(B, S)
+    if window_limited and cfg.local_global_alternating and cfg.sliding_window:
+        # §Perf: local-attention layers only ever read the last `window`
+        # positions — shrink their cache slots accordingly.
+        win = cfg.sliding_window
+        cache_tree["local"] = jax.tree.map(
+            lambda l: Leaf((l.shape[0], l.shape[1], win, *l.shape[3:]),
+                           l.axes, l.dtype, l.scale, l.init),
+            cache_tree["local"],
+            is_leaf=is_leaf,
+        )
+    p_specs = sharding_tree(param_tree, mesh, rules)
+    c_specs = sharding_tree(cache_tree, mesh, rules)
+    tok_spec = rules.sharding(mesh, ("batch",), (B,))
+    logits_spec = rules.sharding(mesh, ("batch", "vocab_act"), (B, cfg.vocab_size))
+
+    def serve_step(params, cache, tokens, lengths):
+        return model.decode(params, cache, tokens, lengths, ctx)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_specs, c_specs, tok_spec, tok_spec),
+        out_shardings=(logits_spec, c_specs),
+        donate_argnums=(1,),
+    )
+    args = (
+        abstract(param_tree),
+        abstract(cache_tree),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    return Cell(
+        arch, shape.name, "decode", jitted, args, rules,
+        meta={"tokens_per_step": B},
+    )
+
+
+# ----------------------------------------------------------------- skip rule
+def cell_skip_reason(cfg: ModelConfig, shape_name: str) -> str | None:
+    """DESIGN.md §long_500k: run long-context decode only for sub-quadratic
+    families (ssm / hybrid); all other shapes run for every arch."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return (
+            "skipped: full-attention arch at 524k context (assignment rule; "
+            "see DESIGN.md §Arch-applicability)"
+        )
+    return None

@@ -1,0 +1,79 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --steps 50 --reduced --ckpt-dir /tmp/ckpt
+
+``--reduced`` swaps in the architecture's smoke-scale config so the loop
+runs on CPU; omit it on real hardware. Restart the same command after a
+crash (or with a different host topology) and it resumes from the newest
+valid checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.data import DataConfig
+from repro.train.loop import FaultInjector, TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale model config (CPU-runnable)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (requires 256 devices)")
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject a crash at these steps (fault-tolerance demo)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (
+        make_production_mesh() if args.production_mesh else make_host_mesh()
+    )
+    tcfg = TrainConfig(
+        steps=args.steps,
+        microbatches=args.microbatches,
+        lr=args.lr,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        ckpt_dir=args.ckpt_dir,
+    )
+    data = DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    )
+    trainer = Trainer(cfg, tcfg, mesh, data)
+    fault = FaultInjector(tuple(args.fail_at)) if args.fail_at else None
+
+    state = trainer.resume_or_init()
+    print(f"training {cfg.name} from step {state.step} to {tcfg.steps} "
+          f"on mesh {dict(mesh.shape)}")
+    while True:
+        try:
+            state = trainer.run(state, fault)
+            break
+        except RuntimeError as e:
+            print(f"!! {e} — restarting from checkpoint")
+            state = trainer.resume_or_init()
+    for m in trainer.metrics:
+        print(json.dumps(m))
+    print(f"done at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Model zoo: composable blocks + family-dispatching assembly."""
+from repro.models.config import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models.layers import NULL_CTX, ShardCtx
+from repro.models.model import Model
+from repro.models.params import abstract, count_params, materialize, spec_tree
+
+__all__ = [
+    "DECODE_32K",
+    "LONG_500K",
+    "Model",
+    "ModelConfig",
+    "NULL_CTX",
+    "PREFILL_32K",
+    "SHAPES",
+    "ShapeConfig",
+    "ShardCtx",
+    "TRAIN_4K",
+    "abstract",
+    "count_params",
+    "materialize",
+    "spec_tree",
+]

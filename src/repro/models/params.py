@@ -1,0 +1,77 @@
+"""Parameter descriptors: shapes + logical sharding axes, materialized lazily.
+
+Model code builds a pytree of :class:`Leaf` descriptors (no allocation).
+From it we derive, without ever touching device memory:
+
+* ``abstract(tree)``      -> ShapeDtypeStruct pytree (dry-run `.lower()` input)
+* ``spec_tree(tree, ...)``-> PartitionSpec pytree (in/out shardings)
+* ``materialize(tree)``   -> real initialized params (smoke tests / engine)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import ShardingRules
+
+
+@dataclass
+class Leaf:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    scale: float | None = None   # None -> 1/sqrt(fan_in); 0.0 -> zeros; else stddev
+    init: str = "normal"         # normal | zeros | ones
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def abstract(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree, is_leaf=is_leaf
+    )
+
+
+def spec_tree(tree, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda l: rules.spec(mesh, l.axes, l.shape), tree, is_leaf=is_leaf
+    )
+
+
+def sharding_tree(tree, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda l: rules.sharding(mesh, l.axes, l.shape), tree, is_leaf=is_leaf
+    )
+
+
+def materialize(tree, seed: int = 0):
+    """Initialize real parameter values (small configs only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_leaf)
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in leaves:
+        if l.init == "zeros" or l.scale == 0.0:
+            out.append(jnp.zeros(l.shape, l.dtype))
+            continue
+        if l.init == "ones":
+            out.append(jnp.ones(l.shape, l.dtype))
+            continue
+        fan_in = l.shape[-2] if len(l.shape) >= 2 else max(1, l.shape[-1])
+        std = l.scale if l.scale is not None else 1.0 / np.sqrt(fan_in)
+        vals = rng.standard_normal(l.shape, dtype=np.float32) * std
+        out.append(jnp.asarray(vals, l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_leaf)
+    return sum(int(np.prod(l.shape)) for l in leaves)

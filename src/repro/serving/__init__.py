@@ -1,0 +1,16 @@
+"""Real JAX serving plane: paged KV pool, engine, MORI router."""
+from repro.serving.engine import Completion, Engine, EngineRequest
+from repro.serving.kvpool import PagePool
+from repro.serving.router import MoriRouter, RouterMetrics, snapshot_state
+from repro.serving.ssm_engine import SsmEngine
+
+__all__ = [
+    "Completion",
+    "Engine",
+    "EngineRequest",
+    "MoriRouter",
+    "PagePool",
+    "RouterMetrics",
+    "SsmEngine",
+    "snapshot_state",
+]

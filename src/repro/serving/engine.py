@@ -1,0 +1,315 @@
+"""A real (small-scale) JAX inference engine with paged KV + typed eviction.
+
+This is the execution plane the MORI scheduler drives in the real system:
+
+* paged two-tier KV storage (:class:`repro.serving.kvpool.PagePool`),
+* RadixAttention-style prefix reuse via :class:`TypedRadixTree` — a new
+  request whose prefix is cached skips prefill for those pages (chunked
+  prefill over the radix prefix),
+* continuous batching decode over fixed slots (JetStream-style),
+* engine-level eviction that follows the scheduler's typed labels
+  (paper §4.3.2): GPU evicts inactive->idle->busy, host evicts
+  inactive->busy->idle, LRU within type,
+* program-level offload / reload / discard entry points used by the
+  MORI router.
+
+Scale note: this engine serves *reduced* configs end-to-end on CPU (tests,
+examples). Paper-scale timing experiments live in ``repro.sim``; production
+mesh lowering in ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.radix_tree import TypedRadixTree
+from repro.core.types import Tier, TypeLabel
+from repro.models import Model
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class EngineRequest:
+    program_id: str
+    tokens: list[int]            # full accumulated context (token ids)
+    max_new_tokens: int = 16
+
+
+@dataclass
+class Completion:
+    program_id: str
+    output_tokens: list[int]
+    cached_tokens: int           # tokens served from the radix cache
+    prefilled_tokens: int        # tokens actually prefilled
+    reloaded_pages: int
+
+
+@dataclass
+class _Slot:
+    request: EngineRequest
+    slot_id: int
+    length: int                  # current context length (incl. generated)
+    produced: list[int] = field(default_factory=list)
+    cached_tokens: int = 0
+    prefilled_tokens: int = 0
+    reloaded_pages: int = 0
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        page_tokens: int = 16,
+        n_device_pages: int = 256,
+        n_host_pages: int = 256,
+        max_slots: int = 4,
+        max_seq: int = 512,
+    ):
+        assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global_alternating, (
+            "the real engine serves dense-cache families; see DESIGN.md"
+        )
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.page_tokens = page_tokens
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        from repro.serving.kvpool import PagePool
+
+        self.pool = PagePool(
+            layers=cfg.num_layers,
+            kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+            page_tokens=page_tokens,
+            n_device_pages=n_device_pages,
+            n_host_pages=n_host_pages,
+        )
+        self.tree = TypedRadixTree(page_tokens)
+        L, KH, HD = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        self.slot_k = jnp.zeros((L, max_slots, max_seq, KH, HD), jnp.bfloat16)
+        self.slot_v = jnp.zeros_like(self.slot_k)
+        self.lengths = np.zeros(max_slots, np.int32)
+        self.last_token = np.zeros(max_slots, np.int32)
+        self.slots: dict[int, _Slot] = {}
+        self._free_slots = list(range(max_slots))
+        self._decode_fn = jax.jit(self._decode_impl)
+        # metrics
+        self.steps = 0
+        self.evicted_pages = {"gpu": 0, "cpu": 0}
+
+    # ------------------------------------------------------------ admission
+    def has_slot(self) -> bool:
+        return bool(self._free_slots)
+
+    def submit(self, req: EngineRequest) -> int:
+        """Admit one request: radix match -> reload -> chunked prefill."""
+        assert self._free_slots, "no free decode slots"
+        assert len(req.tokens) + req.max_new_tokens <= self.max_seq
+        pid = req.program_id
+
+        # 1. promote any host-resident prefix pages back to the device
+        reloaded = self._reload_prefix(req.tokens)
+        # 2. device-resident prefix
+        nodes = self.tree.match_prefix(req.tokens)
+        cached = len(nodes) * self.page_tokens
+        pages = [n.device_page for n in nodes]
+        suffix = req.tokens[cached:]
+        assert suffix, "request must extend its cached prefix"
+
+        prefix = None
+        if pages:
+            pk, pv = self.pool.read_device_pages(pages)
+            prefix = {"k": pk[:, None], "v": pv[:, None]}       # [L,1,Sp,KH,HD]
+
+        batch = {"tokens": jnp.asarray([suffix], jnp.int32)}
+        logits, cache = self.model.prefill(self.params, batch, prefix=prefix)
+        first_token = int(jnp.argmax(logits[0]))
+
+        # 3. install into a decode slot
+        sid = self._free_slots.pop()
+        length = len(req.tokens)
+        k_ctx = cache["k"][:, 0]                                # [L,Ssuf,KH,HD]
+        v_ctx = cache["v"][:, 0]
+        if prefix is not None:
+            k_ctx = jnp.concatenate([prefix["k"][:, 0], k_ctx], axis=1)
+            v_ctx = jnp.concatenate([prefix["v"][:, 0], v_ctx], axis=1)
+        self.slot_k = self.slot_k.at[:, sid, :length].set(k_ctx)
+        self.slot_v = self.slot_v.at[:, sid, :length].set(v_ctx)
+        self.lengths[sid] = length
+        self.last_token[sid] = first_token
+        slot = _Slot(
+            request=req,
+            slot_id=sid,
+            length=length,
+            produced=[first_token],
+            cached_tokens=cached,
+            prefilled_tokens=len(suffix),
+            reloaded_pages=reloaded,
+        )
+        self.slots[sid] = slot
+        self.tree.pin(pid)  # in-use pages are not evictable
+        return sid
+
+    def _reload_prefix(self, tokens: list[int]) -> int:
+        n = 0
+        for node in self.tree.match_prefix_any_tier(tokens):
+            if node.device_page is None and node.host_page is not None:
+                self._ensure_device_page()
+                dp = self.pool.reload_page(node.host_page)
+                if dp is None:
+                    break
+                node.host_page = None
+                node.device_page = dp
+                n += 1
+        return n
+
+    # -------------------------------------------------------------- decode
+    def _decode_impl(self, params, slot_k, slot_v, tokens, lengths):
+        cache = {"k": slot_k, "v": slot_v}
+        logits, new_cache = self.model.decode(params, cache, tokens, lengths)
+        return jnp.argmax(logits, axis=-1), new_cache["k"], new_cache["v"]
+
+    def step(self) -> list[Completion]:
+        """One continuous-batching decode step across all active slots."""
+        if not self.slots:
+            return []
+        self.steps += 1
+        for sid in self.slots:
+            self.lengths[sid] += 1  # the token being decoded extends the ctx
+        toks = jnp.asarray(self.last_token, jnp.int32)
+        lens = jnp.asarray(np.maximum(self.lengths, 1), jnp.int32)
+        next_tok, self.slot_k, self.slot_v = self._decode_fn(
+            self.params, self.slot_k, self.slot_v, toks, lens
+        )
+        next_tok = np.asarray(next_tok)
+        done: list[Completion] = []
+        for sid, slot in list(self.slots.items()):
+            slot.length = int(self.lengths[sid])
+            tok = int(next_tok[sid])
+            slot.produced.append(tok)
+            self.last_token[sid] = tok
+            if len(slot.produced) >= slot.request.max_new_tokens:
+                done.append(self._finish(slot))
+        return done
+
+    def _finish(self, slot: _Slot) -> Completion:
+        """Write the slot's full pages back to the pool + radix, free slot."""
+        req = slot.request
+        all_tokens = req.tokens + slot.produced[:-1]  # last token has no KV yet
+        n_full = len(all_tokens) // self.page_tokens
+        have = len(self.tree.match_prefix(all_tokens))
+        new_pages = []
+        for p in range(have, n_full):
+            self._ensure_device_page()
+            page = self.pool.alloc_device()
+            if page is None:
+                break
+            lo, hi = p * self.page_tokens, (p + 1) * self.page_tokens
+            self.pool.write_device_page(
+                page,
+                self.slot_k[:, slot.slot_id, lo:hi],
+                self.slot_v[:, slot.slot_id, lo:hi],
+            )
+            new_pages.append(page)
+        self.tree.unpin(req.program_id)  # release the pages pinned at submit
+        covered = (have + len(new_pages)) * self.page_tokens
+        self.tree.insert_chain(
+            all_tokens[:covered], new_pages, req.program_id, TypeLabel.BUSY
+        )
+        self.slots.pop(slot.slot_id)
+        self._free_slots.append(slot.slot_id)
+        return Completion(
+            program_id=req.program_id,
+            output_tokens=slot.produced,
+            cached_tokens=slot.cached_tokens,
+            prefilled_tokens=slot.prefilled_tokens,
+            reloaded_pages=slot.reloaded_pages,
+        )
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Completion]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.slots:
+                break
+        return out
+
+    # ---------------------------------------------- typed eviction machinery
+    def _ensure_device_page(self) -> None:
+        """Free one device page if the pool is exhausted (typed order)."""
+        if self.pool.device_free_count() > 0:
+            return
+        for node in self.tree.evictable("gpu"):
+            dp = node.device_page
+            hp = self.pool.offload_page(dp)  # spill to host if possible
+            if hp is not None:
+                node.device_page = None
+                node.host_page = hp
+            else:
+                node.device_page = None
+                self.pool.free_device(dp)
+                self.tree._gc(node)
+            self.evicted_pages["gpu"] += 1
+            return
+        raise RuntimeError("device pool exhausted and nothing evictable")
+
+    def _ensure_host_page(self) -> None:
+        if self.pool.host_free_count() > 0:
+            return
+        for node in self.tree.evictable("cpu"):
+            self.pool.free_host(self.tree.evict(node, "cpu"))
+            self.evicted_pages["cpu"] += 1
+            return
+
+    # --------------------------------------------- MORI program-level verbs
+    def offload_program(self, pid: str) -> int:
+        """GPU -> host for all of the program's device pages. Returns count."""
+        n = 0
+        for node in reversed(self.tree.program_nodes(pid)):  # leaves first
+            if node.device_page is not None and node.refcount == 0:
+                self._ensure_host_page()
+                hp = self.pool.offload_page(node.device_page)
+                if hp is None:
+                    break
+                node.device_page = None
+                node.host_page = hp
+                n += 1
+        return n
+
+    def reload_program(self, pid: str) -> int:
+        n = 0
+        for node in self.tree.program_nodes(pid):
+            if node.device_page is None and node.host_page is not None:
+                self._ensure_device_page()
+                dp = self.pool.reload_page(node.host_page)
+                if dp is None:
+                    break
+                node.host_page = None
+                node.device_page = dp
+                n += 1
+        return n
+
+    def discard_program(self, pid: str, tier: Tier) -> None:
+        for node in reversed(self.tree.program_nodes(pid)):
+            if node.refcount > 0:
+                continue
+            if tier is Tier.GPU and node.device_page is not None:
+                self.pool.free_device(node.device_page)
+                node.device_page = None
+            if tier is Tier.CPU and node.host_page is not None:
+                self.pool.free_host(node.host_page)
+                node.host_page = None
+            self.tree._gc(node)
+        if not any(
+            n.device_page is not None or n.host_page is not None
+            for n in self.tree.program_nodes(pid)
+        ):
+            self.tree.release_program(pid)
+
+    def set_label(self, pid: str, label: TypeLabel) -> None:
+        self.tree.restamp(pid, label)

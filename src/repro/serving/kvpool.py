@@ -1,0 +1,135 @@
+"""Two-tier paged KV storage: device pages (HBM) + host pages (DRAM).
+
+Layout ``[L, n_pages, page_tokens, KH, HD]`` for K and V — the trailing
+(page_tokens, head_dim) tile is what the Pallas paged-attention kernel
+consumes per grid step. Host pages are numpy arrays (on a real TPU host:
+pinned DRAM reached via ``jax.device_get/put``; in this CPU container the
+transfer mechanics — block granularity, explicit copies, byte accounting —
+are identical, only the wire is missing).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PoolStats:
+    device_free: int
+    device_total: int
+    host_free: int
+    host_total: int
+    offload_bytes: int = 0
+    reload_bytes: int = 0
+
+
+class PagePool:
+    def __init__(
+        self,
+        *,
+        layers: int,
+        kv_heads: int,
+        head_dim: int,
+        page_tokens: int,
+        n_device_pages: int,
+        n_host_pages: int,
+        dtype=jnp.bfloat16,
+    ):
+        self.layers = layers
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        self.page_tokens = page_tokens
+        shape = (layers, n_device_pages, page_tokens, kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        hshape = (layers, n_host_pages, page_tokens, kv_heads, head_dim)
+        self.host_k = np.zeros(hshape, np.float32 if dtype == jnp.float32 else np.float16)
+        self.host_v = np.zeros_like(self.host_k)
+        self._free_dev = list(range(n_device_pages))
+        self._free_host = list(range(n_host_pages))
+        self.n_device_pages = n_device_pages
+        self.n_host_pages = n_host_pages
+        self.offload_bytes = 0
+        self.reload_bytes = 0
+
+    @property
+    def page_bytes(self) -> int:
+        return self.layers * self.page_tokens * self.kv_heads * self.head_dim * 2 * 2
+
+    # ---------------------------------------------------------- allocation
+    def device_free_count(self) -> int:
+        return len(self._free_dev)
+
+    def host_free_count(self) -> int:
+        return len(self._free_host)
+
+    def alloc_device(self) -> int | None:
+        return self._free_dev.pop() if self._free_dev else None
+
+    def alloc_host(self) -> int | None:
+        return self._free_host.pop() if self._free_host else None
+
+    def free_device(self, page: int) -> None:
+        self._free_dev.append(page)
+
+    def free_host(self, page: int) -> None:
+        self._free_host.append(page)
+
+    # -------------------------------------------------------------- writes
+    def write_device_page(self, page: int, k_tokens, v_tokens) -> None:
+        """k_tokens/v_tokens: [L, t<=page_tokens, KH, HD]."""
+        t = k_tokens.shape[1]
+        self.k = self.k.at[:, page, :t].set(k_tokens.astype(self.k.dtype))
+        self.v = self.v.at[:, page, :t].set(v_tokens.astype(self.v.dtype))
+
+    def read_device_pages(self, pages: list[int]):
+        """Gather pages -> [L, n*page_tokens, KH, HD] (slot assembly)."""
+        idx = jnp.asarray(pages, jnp.int32)
+        k = self.k[:, idx]                                      # [L,n,t,KH,HD]
+        v = self.v[:, idx]
+        L, n, t, KH, HD = k.shape
+        return k.reshape(L, n * t, KH, HD), v.reshape(L, n * t, KH, HD)
+
+    # ----------------------------------------------------------- transfers
+    def offload_page(self, dev_page: int) -> int | None:
+        """Device -> host. Returns host page id (None if host full)."""
+        hp = self.alloc_host()
+        if hp is None:
+            return None
+        self.host_k[:, hp] = np.asarray(self.k[:, dev_page], np.float32).astype(
+            self.host_k.dtype
+        )
+        self.host_v[:, hp] = np.asarray(self.v[:, dev_page], np.float32).astype(
+            self.host_v.dtype
+        )
+        self.free_device(dev_page)
+        self.offload_bytes += self.page_bytes
+        return hp
+
+    def reload_page(self, host_page: int) -> int | None:
+        """Host -> device. Returns device page id (None if device full)."""
+        dp = self.alloc_device()
+        if dp is None:
+            return None
+        self.k = self.k.at[:, dp].set(
+            jnp.asarray(self.host_k[:, host_page], self.k.dtype)
+        )
+        self.v = self.v.at[:, dp].set(
+            jnp.asarray(self.host_v[:, host_page], self.v.dtype)
+        )
+        self.free_host(host_page)
+        self.reload_bytes += self.page_bytes
+        return dp
+
+    def stats(self) -> PoolStats:
+        return PoolStats(
+            device_free=len(self._free_dev),
+            device_total=self.n_device_pages,
+            host_free=len(self._free_host),
+            host_total=self.n_host_pages,
+            offload_bytes=self.offload_bytes,
+            reload_bytes=self.reload_bytes,
+        )

@@ -1,0 +1,225 @@
+"""MORI router over real engine replicas (the paper's Fig. 6 front door).
+
+The router implements :class:`EngineAdapter`: the scheduler's placement
+actions become real page movements in each engine's two-tier pool. Workload
+replay runs on a *virtual clock* (tool-call sleeps advance time instantly;
+inference advances it by the trace's recorded reasoning wall-time) while the
+engine compute itself is real JAX execution — so policy behaviour is timed
+faithfully and the data plane actually runs.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
+from repro.core.types import ProgramTrace, Tier, TypeLabel
+from repro.serving.engine import Engine, EngineRequest
+
+
+@dataclass
+class RouterMetrics:
+    steps_completed: int = 0
+    tokens_generated: int = 0
+    cached_tokens: int = 0
+    prefilled_tokens: int = 0
+    offloaded_pages: int = 0
+    reloaded_pages: int = 0
+    gated_events: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cached_tokens + self.prefilled_tokens
+        return self.cached_tokens / total if total else 0.0
+
+
+class MoriRouter:
+    """Front door: program-aware routing + placement over real engines."""
+
+    def __init__(
+        self,
+        engines: list[Engine],
+        *,
+        scheduler: str = "mori",
+        gpu_capacity_bytes: int | None = None,
+        cpu_capacity_bytes: int | None = None,
+        config: SchedulerConfig | None = None,
+    ):
+        self.engines = engines
+        cfg0 = engines[0].cfg
+        self.kv_bytes_per_token = (
+            cfg0.num_layers * 2 * cfg0.num_kv_heads * cfg0.head_dim * 2
+        )
+        pool = engines[0].pool
+        gpu_cap = gpu_capacity_bytes or (
+            pool.n_device_pages * pool.page_bytes
+        )
+        cpu_cap = cpu_capacity_bytes or (pool.n_host_pages * pool.page_bytes)
+        self.sched = SCHEDULERS[scheduler](
+            len(engines),
+            TierCapacity(gpu_cap, cpu_cap),
+            self,
+            config or SchedulerConfig(tick_interval_s=5.0),
+        )
+        self.metrics = RouterMetrics()
+        self._pending: dict[str, tuple[EngineRequest, int]] = {}
+        self._dispatched: dict[str, int] = {}
+
+    # ------------------------------------------------------- EngineAdapter
+    def forward(self, pid: str, replica: int, reload: bool, recompute: bool) -> None:
+        req, _ = self._pending[pid]
+        eng = self.engines[replica]
+        if reload:
+            self.metrics.reloaded_pages += eng.reload_program(pid)
+        self._dispatched[pid] = replica
+
+    def offload(self, pid: str, replica: int) -> None:
+        self.metrics.offloaded_pages += self.engines[replica].offload_program(pid)
+
+    def discard(self, pid: str, replica: int | None, tier: Tier) -> None:
+        if replica is not None:
+            self.engines[replica].discard_program(pid, tier)
+
+    def set_label(self, pid: str, replica: int | None, label: TypeLabel) -> None:
+        if replica is not None:
+            self.engines[replica].set_label(pid, label)
+
+    # ------------------------------------------------------------- replay
+    def replay(
+        self,
+        traces: list[ProgramTrace],
+        *,
+        vocab_size: int,
+        max_new_tokens: int = 8,
+        seed: int = 0,
+    ) -> RouterMetrics:
+        """Replay traces concurrently on the virtual clock."""
+        import random
+
+        rng = random.Random(seed)
+        q: list[tuple[float, int, object]] = []
+        seq = itertools.count()
+        state: dict[str, dict] = {}
+
+        def push(t, fn):
+            heapq.heappush(q, (t, next(seq), fn))
+
+        def issue(pid: str, step_idx: int, now: float):
+            st = state[pid]
+            trace: ProgramTrace = st["trace"]
+            rec = trace.steps[step_idx]
+            # synthesize a token context of the recorded length (prefix-stable)
+            want = max(
+                st["ctx_len"] + 1,
+                min(rec.input_tokens // st["scale"], st["max_ctx"]),
+            )
+            grow = want - st["ctx_len"]
+            st["tokens"].extend(
+                rng.randrange(2, vocab_size) for _ in range(grow)
+            )
+            st["ctx_len"] = want
+            req = EngineRequest(
+                program_id=pid,
+                tokens=list(st["tokens"]),
+                max_new_tokens=max_new_tokens,
+            )
+            self._pending[pid] = (req, step_idx)
+            self.sched.request_arrived(pid, want, now)
+            if pid not in self._dispatched:
+                self.metrics.gated_events += 1
+
+        def finish_step(pid: str, now: float):
+            st = state[pid]
+            req, step_idx = self._pending.pop(pid)
+            replica = self._dispatched.pop(pid)
+            eng = self.engines[replica]
+            sid = eng.submit(req)
+            self.sched.notify_inference_started(pid, now)
+            done = eng.run_to_completion()
+            comp = next(c for c in done if c.program_id == pid)
+            self.metrics.steps_completed += 1
+            self.metrics.tokens_generated += len(comp.output_tokens)
+            self.metrics.cached_tokens += comp.cached_tokens
+            self.metrics.prefilled_tokens += comp.prefilled_tokens
+            st["tokens"].extend(comp.output_tokens[:-1])
+            st["ctx_len"] = len(st["tokens"])
+            trace: ProgramTrace = st["trace"]
+            rec = trace.steps[step_idx]
+            end = now + rec.reasoning_wall_s
+            self.sched.request_completed(pid, len(comp.output_tokens), end)
+            nxt = step_idx + 1
+            if nxt < len(trace.steps) and nxt < st["max_steps"]:
+                push(end + rec.tool_duration_s, lambda t, p=pid, n=nxt: issue(p, n, t))
+            else:
+                self.sched.program_finished(pid, end)
+
+        # register programs
+        max_seq = self.engines[0].max_seq
+        for tr in traces:
+            pid = tr.program_id
+            scale = max(1, tr.steps[0].input_tokens // 48)
+            state[pid] = {
+                "trace": tr,
+                "tokens": [],
+                "ctx_len": 0,
+                "scale": scale,
+                "max_ctx": max_seq - (max_new_tokens + 2) * len(tr.steps) - 8,
+                "max_steps": len(tr.steps),
+            }
+            self.sched.program_arrived(pid, self.kv_bytes_per_token, 0.0)
+            push(0.0, lambda t, p=pid: issue(p, 0, t))
+
+        def drain(now: float) -> None:
+            """Execute any requests the scheduler has released to an engine."""
+            progress = True
+            while progress:
+                progress = False
+                for pid in list(self._pending):
+                    if pid in self._dispatched:
+                        finish_step(pid, now)
+                        progress = True
+
+        tick = self.sched.config.tick_interval_s
+        next_tick = tick
+        now = 0.0
+        guard = 0
+        while q:
+            guard += 1
+            if guard > 100_000:
+                raise RuntimeError("router replay did not terminate")
+            t, _, fn = heapq.heappop(q)
+            now = max(now, t)
+            while next_tick <= now:
+                self.sched.tick(next_tick)
+                drain(next_tick)
+                next_tick += tick
+            fn(now)
+            drain(now)
+        # final drain: keep ticking until nothing is pending
+        for _ in range(256):
+            if not self._pending:
+                break
+            now += tick
+            self.sched.tick(now)
+            drain(now)
+        return self.metrics
+
+
+def snapshot_state(router: MoriRouter) -> dict:
+    """Serializable control-plane snapshot (fault tolerance / restart)."""
+    sched = router.sched
+    return {
+        "programs": {
+            pid: {
+                "tier": p.tier.value,
+                "replica": p.replica,
+                "context_tokens": p.context_tokens,
+                "label": p.label.value,
+                "steps_completed": p.steps_completed,
+            }
+            for pid, p in sched.programs.items()
+        },
+        "gpu_used": [r.gpu_used for r in sched.replicas],
+        "cpu_used": [r.cpu_used for r in sched.replicas],
+    }

@@ -1,0 +1,245 @@
+"""MORI on attn-free state (DESIGN.md §Arch-applicability, real engine).
+
+For SSM programs (mamba2) the per-program serving state is an O(1)-in-
+seq-len bundle — SSD state [L,1,H,P,N] + conv state [L,1,W-1,C] — not a
+paged KV cache. Two structural consequences, both visible here:
+
+* **no radix sharing**: SSM state is a lossy running summary, so the only
+  reuse is *exact continuation* — a new request whose tokens extend the
+  program's recorded context resumes from the saved state and feeds just
+  the suffix (the SSM analogue of chunked prefill over a radix prefix);
+* **bundle-granular tiering**: offload/reload moves the whole fixed-size
+  bundle; the two-tier store is a counted slot pool, not a page pool.
+
+:class:`SsmEngine` exposes the same surface as :class:`repro.serving.
+engine.Engine`, so :class:`MoriRouter` (and the full MORI policy stack)
+drives it unchanged — demonstrated in tests/test_ssm_engine.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Tier, TypeLabel
+from repro.models import Model, count_params
+from repro.models.config import ModelConfig
+from repro.models.params import abstract, is_leaf
+from repro.serving.engine import Completion, EngineRequest
+
+
+@dataclass
+class _Bundle:
+    cache: dict                        # {"ssm": [L,1,...], "conv": [L,1,...]}
+    ctx: list[int]                     # tokens summarized by the state
+    label: TypeLabel = TypeLabel.BUSY
+    last_used: int = 0
+
+
+class _PoolShim:
+    """Capacity view the router reads (page == one state bundle)."""
+
+    def __init__(self, bundle_bytes: int, n_device: int, n_host: int):
+        self.page_bytes = bundle_bytes
+        self.n_device_pages = n_device
+        self.n_host_pages = n_host
+
+
+class SsmEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_slots: int = 4,
+        max_seq: int = 512,
+        n_device_states: int = 4,
+        n_host_states: int = 8,
+    ):
+        assert cfg.family == "ssm", cfg.family
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.n_device_states = n_device_states
+        self.n_host_states = n_host_states
+        self.device: dict[str, _Bundle] = {}
+        self.host: dict[str, _Bundle] = {}
+        self.labels: dict[str, TypeLabel] = {}
+        self._clock = 0
+        self._completions: list[Completion] = []
+        self.evicted_pages = {"gpu": 0, "cpu": 0}
+        self.steps = 0
+
+        self.bundle_bytes = sum(
+            int(np.prod(l.shape)) * 2
+            for l in jax.tree.leaves(
+                self.model.describe_cache(1, 1), is_leaf=is_leaf
+            )
+        )
+        self.pool = _PoolShim(self.bundle_bytes, n_device_states, n_host_states)
+        self._decode = jax.jit(self.model.decode)
+        self._prefill = jax.jit(self.model.prefill)
+
+    # ------------------------------------------------------------ surface
+    def has_slot(self) -> bool:
+        return True                      # execution is synchronous
+
+    def submit(self, req: EngineRequest) -> int:
+        self._clock += 1
+        pid = req.program_id
+        tokens = req.tokens
+        reloaded = 0
+
+        bundle = self.device.get(pid)
+        if bundle is None and pid in self.host:
+            bundle = self._reload(pid)
+            reloaded = 1
+
+        if (
+            bundle is not None
+            and len(tokens) > len(bundle.ctx)
+            and tokens[: len(bundle.ctx)] == bundle.ctx
+        ):
+            # exact continuation: resume from the state, feed the suffix
+            # (a non-extending request can't reuse — the state has already
+            # consumed its last token and SSM state can't roll back)
+            cached = len(bundle.ctx)
+            cache = bundle.cache
+            suffix = tokens[cached:]
+        else:
+            # divergence or no state: recompute from scratch
+            if bundle is not None:
+                self._drop(pid)
+            cached = 0
+            cache = None
+            suffix = tokens
+
+        if cache is None:
+            batch = {"tokens": jnp.asarray([tokens], jnp.int32)}
+            logits, cache = self._prefill(self.params, batch)
+            last_logits = logits[0]
+            prefilled = len(tokens)
+            ctx = list(tokens)
+        else:
+            prefilled = len(suffix)
+            ctx = list(tokens)
+            last_logits = None
+            for i, tok in enumerate(suffix):
+                lengths = jnp.asarray([cached + i + 1], jnp.int32)
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray([tok], jnp.int32), lengths
+                )
+                last_logits = logits[0]
+
+        out: list[int] = []
+        for i in range(req.max_new_tokens):
+            nxt = int(jnp.argmax(last_logits))
+            out.append(nxt)
+            if i == req.max_new_tokens - 1:
+                break                  # don't feed the final token: the
+                # stored state then summarizes exactly ``ctx`` and the next
+                # (strictly extending) request starts from a clean suffix
+            ctx.append(nxt)
+            lengths = jnp.asarray([len(ctx)], jnp.int32)
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray([nxt], jnp.int32), lengths
+            )
+            last_logits = logits[0]
+
+        self.device[pid] = _Bundle(
+            cache, ctx, self.labels.get(pid, TypeLabel.BUSY), self._clock
+        )
+        self._enforce_device_capacity()
+        self.steps += 1
+        self._completions.append(
+            Completion(
+                program_id=pid,
+                output_tokens=out,
+                cached_tokens=cached,
+                prefilled_tokens=prefilled,
+                reloaded_pages=reloaded,
+            )
+        )
+        return self.steps
+
+    def step(self) -> list[Completion]:
+        done, self._completions = self._completions, []
+        return done
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Completion]:
+        return self.step()
+
+    # --------------------------------------------------------- tier moves
+    def offload_program(self, pid: str) -> int:
+        bundle = self.device.pop(pid, None)
+        if bundle is None:
+            return 0
+        if len(self.host) >= self.n_host_states:
+            self._evict_host()
+        bundle.cache = jax.tree.map(np.asarray, bundle.cache)
+        self.host[pid] = bundle
+        return 1
+
+    def reload_program(self, pid: str) -> int:
+        return 1 if self._reload(pid) is not None else 0
+
+    def discard_program(self, pid: str, tier: Tier) -> None:
+        if tier is Tier.GPU:
+            self.device.pop(pid, None)
+        else:
+            self.host.pop(pid, None)
+
+    def set_label(self, pid: str, label: TypeLabel) -> None:
+        self.labels[pid] = label
+        for store in (self.device, self.host):
+            if pid in store:
+                store[pid].label = label
+
+    # ----------------------------------------------------------- internals
+    def _reload(self, pid: str) -> _Bundle | None:
+        bundle = self.host.pop(pid, None)
+        if bundle is None:
+            return None
+        bundle.cache = jax.tree.map(jnp.asarray, bundle.cache)
+        self.device[pid] = bundle
+        self._enforce_device_capacity(keep=pid)
+        return bundle
+
+    def _drop(self, pid: str) -> None:
+        self.device.pop(pid, None)
+        self.host.pop(pid, None)
+
+    def _enforce_device_capacity(self, keep: str | None = None) -> None:
+        """Typed eviction, GPU order: inactive -> idle -> busy, LRU within."""
+        order = {TypeLabel.INACTIVE: 0, TypeLabel.IDLE: 1, TypeLabel.BUSY: 2}
+        while len(self.device) > self.n_device_states:
+            victims = sorted(
+                (p for p in self.device if p != keep),
+                key=lambda p: (order[self.device[p].label],
+                               self.device[p].last_used),
+            )
+            if not victims:
+                break
+            v = victims[0]
+            self.evicted_pages["gpu"] += 1
+            if len(self.host) < self.n_host_states:
+                b = self.device.pop(v)
+                b.cache = jax.tree.map(np.asarray, b.cache)
+                self.host[v] = b
+            else:
+                self.device.pop(v)
+
+    def _evict_host(self) -> None:
+        """Typed eviction, host order: inactive -> busy -> idle (reversed —
+        the host tier preferentially retains idle programs, paper §4.3.2)."""
+        order = {TypeLabel.INACTIVE: 0, TypeLabel.BUSY: 1, TypeLabel.IDLE: 2}
+        if not self.host:
+            return
+        v = min(self.host, key=lambda p: (order[self.host[p].label],
+                                          self.host[p].last_used))
+        self.host.pop(v)
+        self.evicted_pages["cpu"] += 1

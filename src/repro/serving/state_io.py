@@ -1,0 +1,81 @@
+"""Serving control-plane persistence (restart / failover).
+
+What must survive a router crash is the *control plane*: the program table
+(tier, replica, context length, idleness window), per-replica tier usage,
+and the typed-radix metadata needed to re-admit programs. KV pages
+themselves are NOT persisted — on restart a program whose pages died with
+the engine re-enters through the Waiting queue and recomputes, which is
+exactly MORI's §4.3.1 semantics (the recompute path doubles as the
+recovery path).
+
+Snapshots are atomic (write-temp + os.replace) and versioned; ``restore``
+rebuilds scheduler state onto a (possibly different-sized) replica set —
+programs homed on replicas that no longer exist are re-queued as Waiting.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+from repro.core.types import Tier, TypeLabel
+
+FORMAT_VERSION = 1
+
+
+def save_snapshot(router, path: str | os.PathLike) -> Path:
+    """Atomic JSON snapshot of the router's scheduler state."""
+    sched = router.sched
+    snap = {
+        "version": FORMAT_VERSION,
+        "num_replicas": len(sched.replicas),
+        "programs": {
+            pid: {
+                "tier": p.tier.value,
+                "replica": p.replica,
+                "context_tokens": p.context_tokens,
+                "kv_bytes_per_token": p.kv_bytes_per_token,
+                "label": p.label.value,
+                "steps_completed": p.steps_completed,
+                "finished": p.finished,
+                "window": p.tracker.window_dump(),
+            }
+            for pid, p in sched.programs.items()
+        },
+    }
+    path = Path(path)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_text(json.dumps(snap, indent=1))
+    os.replace(tmp, path)
+    return path
+
+
+def restore_snapshot(router, path: str | os.PathLike) -> dict:
+    """Rebuild scheduler state from a snapshot onto ``router``.
+
+    KV residency is conservative: every restored unfinished program enters
+    the Waiting tier (its pages died with the old process); its context
+    length and idleness window survive, so placement decisions pick up
+    where they left off after the first recompute. Programs homed on
+    replicas beyond the new replica count are likewise Waiting.
+
+    Returns counters {"restored": n, "requeued": m}.
+    """
+    snap = json.loads(Path(path).read_text())
+    assert snap["version"] == FORMAT_VERSION, snap["version"]
+    sched = router.sched
+    restored = requeued = 0
+    for pid, rec in snap["programs"].items():
+        if rec["finished"]:
+            continue
+        prog = sched.program_arrived(pid, rec["kv_bytes_per_token"], 0.0)
+        prog.context_tokens = rec["context_tokens"]
+        prog.steps_completed = rec["steps_completed"]
+        prog.label = TypeLabel(rec["label"])
+        prog.tracker.window_load(rec["window"])
+        # conservative placement: pages did not survive the crash
+        prog.tier = Tier.NONE
+        prog.replica = None
+        restored += 1
+        requeued += 1
+    return {"restored": restored, "requeued": requeued}

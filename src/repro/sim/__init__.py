@@ -1,0 +1,6 @@
+"""Discrete-event simulation of agent serving (drives repro.core policies)."""
+from repro.sim.engine import FaultPlan, Simulation
+from repro.sim.hardware import CONFIGS, HwConfig, small_test_hw
+from repro.sim.metrics import SimResult
+
+__all__ = ["CONFIGS", "FaultPlan", "HwConfig", "SimResult", "Simulation", "small_test_hw"]

@@ -1,0 +1,23 @@
+"""Agentic workload traces: generator, analysis (paper §3), persistence."""
+from repro.traces.analysis import (
+    PhaseStats,
+    busy_phase_durations,
+    percentile,
+    phase_stats,
+    tool_call_cdf,
+)
+from repro.traces.generator import TraceGenConfig, generate_corpus, generate_program
+from repro.traces.io import load_corpus, save_corpus
+
+__all__ = [
+    "PhaseStats",
+    "TraceGenConfig",
+    "busy_phase_durations",
+    "generate_corpus",
+    "generate_program",
+    "load_corpus",
+    "percentile",
+    "phase_stats",
+    "save_corpus",
+    "tool_call_cdf",
+]

@@ -1,0 +1,211 @@
+"""Training loop: grad accumulation, checkpoint/restart, fault injection,
+elastic re-mesh.
+
+The loop is the train-side counterpart of the serving engine: the same
+model zoo, sharding rules, and optimizer as the dry-run's ``train_step``,
+driven end-to-end at reduced scale on CPU (examples/tests) and lowered
+unchanged on the production mesh.
+
+Fault-tolerance model (the 1000-node story, exercised in tests):
+
+* every ``ckpt_every`` steps the full (params, opt, step) state is written
+  atomically (see ``repro.train.checkpoint``);
+* a crash at ANY point restarts from the newest valid checkpoint — data
+  batches are counter-derived so the resumed run consumes exactly the
+  batches the crashed run would have (bit-identical trajectory, verified
+  in tests/test_train.py);
+* ``FaultInjector`` raises at configurable steps to exercise that path;
+* restart may use a DIFFERENT mesh (fewer hosts after a failure, more
+  after scale-up): ``Trainer.restore`` re-shards the checkpoint through
+  the new mesh's shardings (elastic re-mesh).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import make_train_rules
+from repro.models import Model, ModelConfig, ShardCtx
+from repro.models.params import abstract, is_leaf, materialize, sharding_tree
+from repro.train import checkpoint as ckpt_lib
+from repro.train.data import DataConfig, TokenPipeline
+from repro.train.optimizer import adamw_update, describe_opt_state
+
+
+class FaultInjector:
+    """Raises a simulated node failure at the given global steps."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+        self.fired: set[int] = set()
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1          # grad accumulation factor
+    lr: float = 3e-4
+    ckpt_every: int = 0            # 0 = no checkpointing
+    ckpt_dir: str = ""
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+@dataclass
+class TrainState:
+    params: object
+    opt: object
+    step: int = 0
+
+
+class Trainer:
+    """Builds the jitted accumulating train step on an arbitrary mesh."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                 data: DataConfig | None = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.model = Model(cfg)
+        self.rules = make_train_rules(mesh)
+        self.ctx = ShardCtx(mesh, self.rules)
+        self.param_tree = self.model.describe()
+        self.opt_tree = describe_opt_state(
+            self.param_tree, bf16_moments=cfg.bf16_moments
+        )
+        self.data_cfg = data
+        self.pipeline = TokenPipeline(data) if data else None
+        self._jit = None
+        self.metrics: list[dict] = []
+
+    # ------------------------------------------------------------- state
+    def init_state(self) -> TrainState:
+        params = materialize(self.param_tree, seed=self.tcfg.seed)
+        opt = materialize(self.opt_tree)
+        p_sh = sharding_tree(self.param_tree, self.mesh, self.rules)
+        o_sh = sharding_tree(self.opt_tree, self.mesh, self.rules)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        opt = jax.tree.map(jax.device_put, opt, o_sh)
+        return TrainState(params, opt, 0)
+
+    def shardings(self):
+        return (
+            sharding_tree(self.param_tree, self.mesh, self.rules),
+            sharding_tree(self.opt_tree, self.mesh, self.rules),
+        )
+
+    # -------------------------------------------------------------- step
+    def build_step(self):
+        """jitted (params, opt, tokens[M, B/M, S+1]) -> (params, opt, loss)
+        with M sequential microbatches (grad accumulation via lax.scan)."""
+        if self._jit is not None:
+            return self._jit
+        model, ctx, tcfg = self.model, self.ctx, self.tcfg
+
+        def loss_fn(p, tokens):
+            return model.loss(p, {"tokens": tokens}, ctx)
+
+        def train_step(params, opt, tokens):
+            def micro(acc, tok):
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, tok
+                )
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda l: jnp.zeros(l.shape, jnp.float32),
+                self.param_tree, is_leaf=is_leaf,
+            )
+            grads, losses = jax.lax.scan(micro, zeros, tokens)
+            grads = jax.tree.map(lambda g: g / tokens.shape[0], grads)
+            new_p, new_opt = adamw_update(grads, opt, params, lr=tcfg.lr)
+            return new_p, new_opt, losses.mean()
+
+        p_sh, o_sh = self.shardings()
+        tok_sh = NamedSharding(
+            self.mesh,
+            self.rules.spec(self.mesh, (None, "batch", None)),
+        )
+        self._jit = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, tok_sh),
+            out_shardings=(p_sh, o_sh, NamedSharding(self.mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        return self._jit
+
+    def _tokens_for(self, step: int) -> np.ndarray:
+        batch = self.pipeline.batch_at(step)["tokens"]
+        m = self.tcfg.microbatches
+        b = batch.shape[0]
+        assert b % m == 0, (b, m)
+        return batch.reshape(m, b // m, -1)
+
+    # -------------------------------------------------------------- run
+    def run(self, state: TrainState | None = None,
+            fault: FaultInjector | None = None) -> TrainState:
+        """Run to ``tcfg.steps``; checkpoint periodically; propagate injected
+        faults after making the state durable (caller restarts via
+        ``resume_or_init``)."""
+        tcfg = self.tcfg
+        if state is None:
+            state = self.resume_or_init()
+        step_fn = self.build_step()
+        t0 = time.time()
+        while state.step < tcfg.steps:
+            if fault is not None:
+                fault.check(state.step)
+            tokens = self._tokens_for(state.step)
+            state.params, state.opt, loss = step_fn(
+                state.params, state.opt, tokens
+            )
+            state.step += 1
+            if tcfg.log_every and state.step % tcfg.log_every == 0:
+                loss_v = float(loss)
+                self.metrics.append(
+                    {"step": state.step, "loss": loss_v,
+                     "wall_s": round(time.time() - t0, 2)}
+                )
+            if tcfg.ckpt_every and state.step % tcfg.ckpt_every == 0:
+                self.save(state)
+        if tcfg.ckpt_every:
+            self.save(state)
+        return state
+
+    # ------------------------------------------------------ checkpointing
+    def save(self, state: TrainState) -> None:
+        ckpt_lib.save(
+            self.tcfg.ckpt_dir,
+            state.step,
+            {"params": state.params, "opt": state.opt},
+            extra={"model": self.cfg.name, "seed": self.tcfg.seed},
+            keep=self.tcfg.keep,
+        )
+
+    def resume_or_init(self) -> TrainState:
+        """Resume from the newest valid checkpoint, else fresh init. Works
+        across mesh changes: the restore re-shards onto self.mesh."""
+        if self.tcfg.ckpt_dir and ckpt_lib.latest_step(self.tcfg.ckpt_dir) is not None:
+            p_sh, o_sh = self.shardings()
+            ref = {
+                "params": abstract(self.param_tree),
+                "opt": abstract(self.opt_tree),
+            }
+            tree, step, _ = ckpt_lib.restore(
+                self.tcfg.ckpt_dir, ref,
+                shardings={"params": p_sh, "opt": o_sh},
+            )
+            return TrainState(tree["params"], tree["opt"], step)
+        return self.init_state()

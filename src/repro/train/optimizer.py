@@ -1,0 +1,59 @@
+"""AdamW in pure JAX (pytree-wise), with optional bf16 moments for the
+giant MoEs (arctic-480b) so optimizer state fits v5e HBM budgets."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Leaf, is_leaf
+
+
+def describe_opt_state(param_tree, bf16_moments: bool = False) -> dict:
+    """Leaf descriptors for the optimizer state (mirrors param shardings)."""
+    mdtype = jnp.bfloat16 if bf16_moments else jnp.float32
+
+    def mom(l: Leaf) -> Leaf:
+        return Leaf(l.shape, l.axes, mdtype, init="zeros")
+
+    return {
+        "m": jax.tree.map(mom, param_tree, is_leaf=is_leaf),
+        "v": jax.tree.map(mom, param_tree, is_leaf=is_leaf),
+        "count": Leaf((), (), jnp.int32, init="zeros"),
+    }
+
+
+def adamw_update(
+    grads,
+    opt_state,
+    params,
+    *,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = opt_state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

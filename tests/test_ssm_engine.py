@@ -1,0 +1,136 @@
+"""MORI on attn-free (SSM) programs in the REAL engine: exact-continuation
+state reuse, bundle offload/reload, typed eviction, router integration."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.scheduler import SchedulerConfig
+from repro.core.types import Tier, TypeLabel
+from repro.models import Model, materialize
+from repro.serving import MoriRouter
+from repro.serving.engine import EngineRequest
+from repro.serving.ssm_engine import SsmEngine
+from repro.traces import TraceGenConfig, generate_corpus
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("mamba2-2.7b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+    return cfg, params
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("n_device_states", 3)
+    kw.setdefault("n_host_states", 6)
+    kw.setdefault("max_seq", 256)
+    return SsmEngine(cfg, params, **kw)
+
+
+def test_state_is_o1_and_bundle_bytes_constant(setup):
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+    assert eng.bundle_bytes > 0
+    # bundle size is independent of max_seq — the SSM hallmark
+    eng2 = SsmEngine(cfg, params, max_seq=4 * eng.max_seq)
+    assert eng2.bundle_bytes == eng.bundle_bytes
+
+
+def test_exact_continuation_reuses_state(setup):
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+    toks = [5, 6, 7, 8]
+    eng.submit(EngineRequest("p0", toks, max_new_tokens=2))
+    c1 = eng.step()[0]
+    assert c1.cached_tokens == 0 and c1.prefilled_tokens == 4
+
+    # continuation: old context + generated + tool-result tokens
+    toks2 = toks + c1.output_tokens + [9, 10]
+    eng.submit(EngineRequest("p0", toks2, max_new_tokens=2))
+    c2 = eng.step()[0]
+    # state summarizes everything except the final generated token
+    assert c2.cached_tokens == len(toks) + len(c1.output_tokens) - 1
+    assert c2.prefilled_tokens == 3          # final token + tool-result suffix
+
+
+def test_continuation_matches_recompute(setup):
+    """Resuming from saved state must produce the same tokens as
+    recomputing the full context from scratch."""
+    cfg, params = setup
+    toks = [3, 4, 5, 6, 7]
+    e1 = make_engine(cfg, params)
+    e1.submit(EngineRequest("a", toks, max_new_tokens=2))
+    first = e1.step()[0]
+    full = toks + first.output_tokens + [11]
+    e1.submit(EngineRequest("a", full, max_new_tokens=3))
+    cont = e1.step()[0]
+    assert cont.cached_tokens > 0
+
+    e2 = make_engine(cfg, params)
+    e2.submit(EngineRequest("b", full, max_new_tokens=3))
+    scratch = e2.step()[0]
+    assert scratch.cached_tokens == 0
+    assert cont.output_tokens == scratch.output_tokens
+
+
+def test_divergent_context_recomputes(setup):
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+    eng.submit(EngineRequest("p0", [1, 2, 3, 4], max_new_tokens=1))
+    eng.step()
+    eng.submit(EngineRequest("p0", [1, 2, 9, 9, 9], max_new_tokens=1))
+    c = eng.step()[0]
+    assert c.cached_tokens == 0              # lossy state: no partial reuse
+    assert c.prefilled_tokens == 5
+
+
+def test_offload_reload_roundtrip(setup):
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+    toks = [2, 3, 4]
+    eng.submit(EngineRequest("p0", toks, max_new_tokens=1))
+    out1 = eng.step()[0].output_tokens
+    assert eng.offload_program("p0") == 1
+    assert "p0" not in eng.device and "p0" in eng.host
+    # continuation straight from host: reloads then reuses
+    eng.submit(EngineRequest("p0", toks + out1 + [7], max_new_tokens=1))
+    c = eng.step()[0]
+    assert c.reloaded_pages == 1
+    assert c.cached_tokens == len(toks) + len(out1) - 1
+
+
+def test_typed_eviction_prefers_inactive_then_idle(setup):
+    cfg, params = setup
+    eng = make_engine(cfg, params, n_device_states=2)
+    for i, label in enumerate([TypeLabel.BUSY, TypeLabel.IDLE,
+                               TypeLabel.INACTIVE]):
+        pid = f"p{i}"
+        eng.submit(EngineRequest(pid, [i + 2, i + 3], max_new_tokens=1))
+        eng.step()
+        eng.set_label(pid, label)
+    eng.submit(EngineRequest("p3", [9, 8], max_new_tokens=1))
+    eng.step()
+    # capacity 2: the INACTIVE and IDLE programs were pushed out first
+    assert "p0" in eng.device or eng.device.get("p0") is None
+    assert "p2" not in eng.device            # inactive evicted first
+    assert eng.evicted_pages["gpu"] >= 2
+
+
+def test_router_drives_ssm_engine_end_to_end(setup):
+    """The full MORI policy stack over the SSM engine, unchanged."""
+    cfg, params = setup
+    engines = [make_engine(cfg, params, n_device_states=3, n_host_states=8)]
+    router = MoriRouter(
+        engines,
+        scheduler="mori",
+        config=SchedulerConfig(tick_interval_s=2.0),
+    )
+    tg = TraceGenConfig(min_steps=3, mean_steps=4, max_steps=4,
+                        initial_context_mean=120, max_context=240)
+    corpus = generate_corpus(3, seed=0, cfg=tg)
+    m = router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=2)
+    assert m.steps_completed >= 9
+    # continuation reuse gives a high hit rate without any radix tree
+    assert m.cache_hit_rate > 0.4

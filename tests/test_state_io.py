@@ -1,0 +1,122 @@
+"""Serving control-plane snapshot/restore (fault tolerance)."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.idleness import IdlenessTracker
+from repro.core.scheduler import SchedulerConfig
+from repro.core.types import Status, Tier, TypeLabel
+from repro.models import Model, materialize
+from repro.serving import Engine, MoriRouter
+from repro.serving.state_io import restore_snapshot, save_snapshot
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+    return cfg, params
+
+
+def _router(cfg, params, replicas=1):
+    engines = [
+        Engine(cfg, params, page_tokens=16, n_device_pages=64,
+               n_host_pages=96, max_slots=2, max_seq=320)
+        for _ in range(replicas)
+    ]
+    return MoriRouter(engines, scheduler="mori",
+                      config=SchedulerConfig(tick_interval_s=2.0))
+
+
+def _mid_flight(router, n=3, replicas=1):
+    """Programs in assorted tiers, as during live serving."""
+    sched = router.sched
+    tiers = [Tier.GPU, Tier.CPU, Tier.NONE]
+    for i in range(n):
+        p = sched.program_arrived(f"prog-{i}", 4096, now=float(i))
+        p.context_tokens = 100 * (i + 1)
+        p.steps_completed = i
+        p.tier = tiers[i % 3]
+        p.replica = i % replicas if p.tier is not Tier.NONE else None
+        p.label = [TypeLabel.BUSY, TypeLabel.IDLE, TypeLabel.INACTIVE][i % 3]
+        p.tracker.transition(Status.REASONING, float(i))
+        p.tracker.transition(Status.ACTING, float(i) + 0.5)
+    return sched
+
+
+def test_snapshot_roundtrip(cfg_params, tmp_path):
+    cfg, params = cfg_params
+    router = _router(cfg, params)
+    _mid_flight(router, n=3)
+    p = save_snapshot(router, tmp_path / "state.json")
+    snap = json.loads(p.read_text())
+    assert snap["version"] == 1
+    assert len(snap["programs"]) == 3
+
+    router2 = _router(cfg, params)
+    counters = restore_snapshot(router2, p)
+    assert counters["restored"] == 3
+    for pid, prog in router2.sched.programs.items():
+        ref = snap["programs"][pid]
+        assert prog.context_tokens == ref["context_tokens"]
+        assert prog.steps_completed == ref["steps_completed"]
+        assert prog.label.value == ref["label"]
+        assert prog.tier is Tier.NONE          # conservative re-queue
+        assert prog.replica is None
+
+
+def test_finished_programs_not_requeued(cfg_params, tmp_path):
+    cfg, params = cfg_params
+    router = _router(cfg, params)
+    sched = _mid_flight(router, n=2)
+    sched.programs["prog-0"].finished = True
+    p = save_snapshot(router, tmp_path / "f.json")
+
+    router2 = _router(cfg, params)
+    counters = restore_snapshot(router2, p)
+    assert counters["restored"] == 1
+    assert "prog-0" not in router2.sched.programs
+
+
+def test_snapshot_atomic(cfg_params, tmp_path):
+    cfg, params = cfg_params
+    router = _router(cfg, params)
+    _mid_flight(router, n=2)
+    p = tmp_path / "state.json"
+    save_snapshot(router, p)
+    first = p.read_text()
+    save_snapshot(router, p)               # overwrite is atomic, not append
+    assert json.loads(p.read_text()) == json.loads(first)
+    assert not (tmp_path / "state.json.tmp").exists()
+
+
+def test_restore_onto_fewer_replicas(cfg_params, tmp_path):
+    """A snapshot from 3 replicas restores onto 1 (elastic failover)."""
+    cfg, params = cfg_params
+    router3 = _router(cfg, params, replicas=3)
+    _mid_flight(router3, n=5, replicas=3)
+    p = save_snapshot(router3, tmp_path / "s3.json")
+
+    router1 = _router(cfg, params, replicas=1)
+    counters = restore_snapshot(router1, p)
+    assert counters["restored"] == 5
+    for prog in router1.sched.programs.values():
+        assert prog.replica is None
+
+
+def test_tracker_window_roundtrip():
+    t = IdlenessTracker(window=3)
+    t.transition(Status.REASONING, 0.0)
+    t.transition(Status.ACTING, 1.0)
+    t.transition(Status.REASONING, 3.0)      # cycle: 1s reasoning / 2s acting
+    t.transition(Status.ACTING, 4.0)
+    dump = t.window_dump()
+
+    t2 = IdlenessTracker(window=3)
+    t2.window_load(dump)
+    # same window contents -> same idleness estimate at a fresh instant
+    assert abs(t2.idleness(0.0) - t.idleness(4.0)) < 0.35
+    assert t2.status is Status.ACTING

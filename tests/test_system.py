@@ -1,0 +1,44 @@
+"""End-to-end behaviour: full paper pipeline at reduced scale.
+
+The heavyweight per-figure runs live in ``benchmarks/``; this test asserts
+the *pipeline* — trace generation -> simulation of all four schedulers ->
+paper-claim directionality — works end to end in one shot.
+"""
+from repro.sim import Simulation, small_test_hw
+from repro.traces import generate_corpus, phase_stats
+
+
+def test_end_to_end_paper_pipeline():
+    corpus = generate_corpus(24, seed=11)
+
+    # §3 characterization holds on this corpus
+    stats = phase_stats(corpus, threshold_s=2.0)
+    assert stats.short_fraction > 0.75
+    assert stats.orders_of_magnitude > 2.5
+
+    # §6 evaluation at reduced scale, under memory pressure
+    hw = small_test_hw(hbm_bytes=250_000_000)
+    results = {}
+    for sched in ["mori", "ta+o", "ta", "smg"]:
+        sim = Simulation(
+            sched,
+            hw,
+            corpus,
+            num_replicas=2,
+            concurrency_per_replica=10,
+            cpu_ratio=2.0,
+            duration_s=300.0,
+            warmup_s=30.0,
+            seed=0,
+        )
+        results[sched] = sim.run()
+
+    mori = results["mori"]
+    # headline claim: MORI >= every baseline on throughput, <= on TTFT
+    for name, r in results.items():
+        assert mori.output_tok_per_s >= 0.99 * r.output_tok_per_s, name
+        assert mori.ttft_avg_s <= 1.05 * r.ttft_avg_s, name
+    # affinity claim (§6.2.2): near-zero churn for MORI
+    assert mori.switches_per_program <= results["ta+o"].switches_per_program
+    # all schedulers made real progress
+    assert all(r.steps_completed > 200 for r in results.values())

@@ -7,10 +7,19 @@ path when an engine dies.
 """
 from __future__ import annotations
 
+from repro.dist import make_replica_set
 from repro.sim import CONFIGS, FaultPlan, Simulation
 from repro.traces import generate_corpus
 
 HW = "h200-qwen3-30b-a3b"
+
+
+def _placement():
+    # DP=3 fleet layout: three replicas sharing one rules object, exactly
+    # how repro.launch.serve places the real engines. On the host mesh the
+    # rules carry layout provenance only (every spec replicates), so the
+    # default num_kv_heads is irrelevant here.
+    return make_replica_set(3)
 
 
 def run(sched: str, *, conc: int, faults: list[FaultPlan] | None = None):
@@ -18,7 +27,7 @@ def run(sched: str, *, conc: int, faults: list[FaultPlan] | None = None):
         sched,
         CONFIGS[HW],
         generate_corpus(64, seed=0),
-        num_replicas=3,
+        placement=_placement(),
         concurrency_per_replica=conc,
         cpu_ratio=2.0,
         duration_s=600.0,

@@ -4,11 +4,20 @@ Serves a reduced dense model with the real JAX engine behind the MORI
 router, replays a small agentic trace corpus, and prints the placement /
 cache metrics the paper's evaluation is built on.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
 """
 from __future__ import annotations
 
+import sys
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401  (installed, or PYTHONPATH=src)
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
 from repro.configs import get_config
+from repro.dist import make_replica_set
 from repro.models import Model, materialize
 from repro.serving import Engine, MoriRouter
 from repro.traces import TraceGenConfig, generate_corpus
@@ -19,19 +28,27 @@ def main() -> None:
     cfg = get_config("qwen1.5-0.5b").reduced()
     params = materialize(Model(cfg).describe(), seed=0)
 
-    # 2. one real engine: paged KV pool (device+host tiers), radix prefix
+    # 2. a one-replica placement on the 1x1 CPU host mesh — the same
+    #    repro.dist decode rules the 256-chip production mesh uses
+    replica_set = make_replica_set(1, num_kv_heads=cfg.num_kv_heads)
+    placement = replica_set.placement(0)
+    print(f"host mesh {dict(placement.mesh.shape)}, "
+          f"logits spec {placement.spec(('batch', 'vocab_act'))}")
+
+    # 3. one real engine: paged KV pool (device+host tiers), radix prefix
     #    cache with typed eviction, continuous-batching decode
     engine = Engine(
         cfg, params,
         page_tokens=16, n_device_pages=96, n_host_pages=192,
         max_slots=4, max_seq=256,
+        placement=placement,
     )
 
-    # 3. the MORI router: windowed idleness ranking, three-tier placement,
+    # 4. the MORI router: windowed idleness ranking, three-tier placement,
     #    sticky rebalancing, admission control (paper §4)
     router = MoriRouter([engine], scheduler="mori")
 
-    # 4. a Claude-Code-like trace corpus (busy/idle two-phase structure, §3)
+    # 5. a Claude-Code-like trace corpus (busy/idle two-phase structure, §3)
     corpus = generate_corpus(
         6, seed=0,
         cfg=TraceGenConfig(

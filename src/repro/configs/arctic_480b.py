@@ -4,6 +4,8 @@ MoE 128e top-2 + dense residual. [hf:Snowflake/snowflake-arctic-base; hf]
 Note: 56 q-heads do not divide the 16-way model axis; the sharding rules
 fall back to replicated head-activations while the fused projections stay
 sharded (DESIGN.md §6). bf16 Adam moments keep optimizer state within HBM.
+
+Paper role: largest capacity-pressure scale point (480B MoE) — the arch that forces KV offload decisions at paper scale and the pad-heads sharding fallback study.
 """
 from repro.models.config import ModelConfig
 

@@ -1,6 +1,8 @@
 """gemma2-27b [dense]: 46L d_model=4608 32H (GQA kv=16) d_ff=36864
 vocab=256000 — local+global alternating, logit softcap.
-[arXiv:2408.00118; hf]"""
+[arXiv:2408.00118; hf]
+Paper role: upper dense scale point (tensor-parallel single node); the softcap + alternating-window case of the decode_32k cell.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,6 +1,8 @@
 """gemma2-9b [dense]: 42L d_model=3584 16H (GQA kv=8) d_ff=14336
 vocab=256000 — local+global alternating, logit softcap.
-[arXiv:2408.00118; hf]"""
+[arXiv:2408.00118; hf]
+Paper role: mid-scale dense GPU pair (single-accelerator serving, ~9B); exercises the local/global alternating-cache shape the window-limited-cache lever targets.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

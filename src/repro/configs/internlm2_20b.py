@@ -1,5 +1,7 @@
 """internlm2-20b [dense]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
-vocab=92544. [arXiv:2403.17297; hf]"""
+vocab=92544. [arXiv:2403.17297; hf]
+Paper role: plain-GQA 20B dense scale point — the clean baseline column between the 9B and MoE rows of the dry-run matrix.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,6 +1,8 @@
 """internvl2-26b [vlm]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
 vocab=92553 — InternViT frontend is a STUB (input_specs provides projected
-patch embeddings); backbone = InternLM2-20B. [arXiv:2404.16821; hf]"""
+patch embeddings); backbone = InternLM2-20B. [arXiv:2404.16821; hf]
+Paper role: VLM agent workload — image-token prefixes inflate prefill and prefix-cache pressure relative to its InternLM2 text backbone.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

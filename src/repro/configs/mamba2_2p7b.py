@@ -1,5 +1,7 @@
 """mamba2-2.7b [ssm]: 64L d_model=2560, attn-free, vocab=50280, ssm_state=128.
-[arXiv:2405.21060; unverified]"""
+[arXiv:2405.21060; unverified]
+Paper role: attention-free O(1)-state family — the long_500k cell and the SSM-state (not KV) variant of MORI's placement currency.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,5 +1,7 @@
 """qwen1.5-0.5b [dense]: 24L d_model=1024 16H (MHA kv=16) d_ff=2816
-vocab=151936 — QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+vocab=151936 — QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]
+Paper role: smallest scale point — the CPU-runnable stand-in for the paper's 7B-class single-GPU pair (h200-80g-qwen2.5-7b); default arch for quickstart, tests and the real-engine replay.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,6 +1,8 @@
 """whisper-medium [audio]: 24L(+24 enc) d_model=1024 16H (MHA) d_ff=4096
 vocab=51865 — enc-dec; conv frontend is a STUB (input_specs provides
-precomputed 1500-frame embeddings). [arXiv:2212.04356; unverified]"""
+precomputed 1500-frame embeddings). [arXiv:2212.04356; unverified]
+Paper role: encoder-decoder tool-side workload (audio transcription as an agent tool call) — cross-attention KV joins the cache inventory.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

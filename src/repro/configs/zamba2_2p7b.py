@@ -1,6 +1,8 @@
 """zamba2-2.7b [hybrid]: 54L d_model=2560 32H (MHA kv=32) d_ff=10240
 vocab=32000, ssm_state=64 — Mamba2 backbone + ONE shared attention block
-applied every 6 layers on concat(hidden, embedding). [arXiv:2411.15242; hf]"""
+applied every 6 layers on concat(hidden, embedding). [arXiv:2411.15242; hf]
+Paper role: hybrid SSM+shared-attention family — mixed KV/SSM serving state, the hardest case for tier accounting.
+"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

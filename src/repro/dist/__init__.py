@@ -1,0 +1,18 @@
+"""Distribution layer: logical-axis sharding rules + replica placement."""
+from repro.dist.placement import ReplicaPlacement, ReplicaSet, make_replica_set
+from repro.dist.sharding import (
+    LOGICAL_AXES,
+    ShardingRules,
+    make_decode_rules,
+    make_train_rules,
+)
+
+__all__ = [
+    "LOGICAL_AXES",
+    "ReplicaPlacement",
+    "ReplicaSet",
+    "ShardingRules",
+    "make_decode_rules",
+    "make_replica_set",
+    "make_train_rules",
+]

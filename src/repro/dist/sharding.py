@@ -1,0 +1,202 @@
+"""Logical-axis sharding rules: the layer between model code and the mesh.
+
+Model code names *logical* axes ("embed", "heads", "batch", ...) on every
+parameter (:class:`repro.models.params.Leaf`), activation constraint
+(:meth:`repro.models.layers.ShardCtx.constrain`) and cache leaf. A
+:class:`ShardingRules` object maps those names to *mesh* axes ("data",
+"model", "pod") and resolves the mapping per-shape:
+
+* a logical axis whose mesh axes are absent from the mesh is replicated
+  (the same rules run on ``make_host_mesh()`` (1x1 CPU) and
+  ``make_production_mesh()`` (16x16 / 2x16x16));
+* a dimension that is not divisible by the mesh-axis product falls back to
+  replication and is recorded in :attr:`ShardingRules.fallbacks` so the
+  dry-run artifact surfaces every silently-replicated tensor (arctic's 56
+  q heads on a 16-way model axis is the canonical case — see the
+  ``pad_heads`` lever in ``repro.launch.steps``);
+* one mesh axis is never used twice within a single PartitionSpec (GSPMD
+  rejects it): the earlier dimension wins, the later one replicates.
+
+Two rule sets cover the repo's two regimes:
+
+* :func:`make_train_rules` — FSDP over "data" (parameters shard their
+  "embed" dimension), tensor-parallel over "model" (heads / ffn / vocab),
+  batch over "pod"+"data"; optional sequence parallelism.
+* :func:`make_decode_rules` — pure tensor-parallel weights (replicated over
+  "data", so decode batches need no weight collectives), KV-head-sharded
+  caches when the head count divides the model axis, batch over
+  "pod"+"data".
+
+See docs/architecture.md for the full logical-axis glossary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from jax.sharding import NamedSharding, PartitionSpec
+
+Axes = tuple[str | None, ...]
+
+#: logical axis -> one-line meaning (the glossary rendered in the docs)
+LOGICAL_AXES = {
+    # weight axes
+    "vocab": "vocabulary rows of the embedding / output head",
+    "embed": "model width (d_model) dimension of weight matrices",
+    "heads": "flattened q/kv head projection columns (h * head_dim)",
+    "ffn": "dense FFN hidden dimension",
+    "experts": "MoE expert index",
+    "expert_ffn": "per-expert FFN hidden dimension",
+    "ssm_heads": "mamba2 inner / head projection columns",
+    "layers": "stacked-layer leading dim of scanned blocks (never sharded)",
+    "conv": "ssm depthwise-conv tap dim (never sharded)",
+    # activation / cache axes
+    "batch": "global batch rows",
+    "seq": "sequence positions (sharded only under sequence parallelism)",
+    "kv_seq": "cache slot positions",
+    "head_dim": "per-head feature dim (never sharded)",
+    "embed_act": "activation width",
+    "heads_act": "activation attention heads",
+    "kv_heads_act": "activation / cache KV heads",
+    "ffn_act": "activation FFN hidden",
+    "experts_act": "activation expert dim of MoE dispatch",
+    "ssm_heads_act": "activation / cache SSM heads",
+    "vocab_act": "activation logits vocabulary",
+}
+
+
+@dataclass
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping with divisibility-aware fallback.
+
+    ``rules`` maps each logical axis to an ordered tuple of *candidate* mesh
+    axes; resolution keeps the longest prefix of candidates that (a) exist
+    in the mesh, (b) are not already used by an earlier dimension of the
+    same spec, and (c) whose size product divides the dimension. An empty
+    tuple (or a missing key) means "always replicate".
+    """
+
+    rules: dict[str, tuple[str, ...]]
+    #: (logical_axis, mesh_axes, dim) triples that lost sharding to a
+    #: divisibility or double-use fallback (deduplicated; surfaced by
+    #: ``repro.launch.dryrun`` as the "fallbacks" artifact field).
+    fallbacks: list[tuple[str, str, int]] = field(default_factory=list)
+
+    # ------------------------------------------------------------ resolve
+    def spec(self, mesh, axes: Axes, shape: tuple[int, ...] | None = None
+             ) -> PartitionSpec:
+        """PartitionSpec for one array. ``shape=None`` skips divisibility
+        checks (used for specs built before shapes are known)."""
+        sizes = dict(mesh.shape)
+        used: set[str] = set()
+        out: list[None | str | tuple[str, ...]] = []
+        for i, logical in enumerate(axes):
+            cand = self.rules.get(logical) if logical is not None else None
+            if not cand:
+                out.append(None)
+                continue
+            picked = [m for m in cand if m in sizes and m not in used]
+            dim = None if shape is None else shape[i]
+            if dim is not None:
+                # drop trailing candidates until the product divides the dim
+                while picked and dim % _prod(sizes[m] for m in picked):
+                    picked.pop()
+            if _prod(sizes[m] for m in picked) <= 1:
+                # nothing actually sharded: replicate, and record the loss
+                # when the rule *wanted* a >1-way mesh axis for this dim
+                wanted = [m for m in cand if sizes.get(m, 1) > 1]
+                if wanted and dim is not None:
+                    self._record(logical, "+".join(wanted), dim)
+                out.append(None)
+                continue
+            used.update(picked)
+            out.append(picked[0] if len(picked) == 1 else tuple(picked))
+        return PartitionSpec(*out)
+
+    def sharding(self, mesh, axes: Axes, shape: tuple[int, ...] | None = None
+                 ) -> NamedSharding:
+        """NamedSharding for one array on ``mesh`` (see :meth:`spec`)."""
+        return NamedSharding(mesh, self.spec(mesh, axes, shape))
+
+    def _record(self, logical: str, mesh_axes: str, dim: int) -> None:
+        entry = (logical, mesh_axes, int(dim))
+        if entry not in self.fallbacks:
+            self.fallbacks.append(entry)
+
+
+def _prod(it) -> int:
+    p = 1
+    for v in it:
+        p *= v
+    return p
+
+
+# ------------------------------------------------------------------ rule sets
+def make_train_rules(mesh, *, sequence_parallel: bool = False) -> ShardingRules:
+    """FSDP + tensor-parallel training rules.
+
+    Parameters shard their width ("embed") over the "data" axis (FSDP) and
+    their hidden/head dims over "model" (TP); MoE experts take the "pod"
+    axis when present (expert parallelism across pods). Activations keep
+    batch over "pod"+"data" and the TP'd hidden dims over "model";
+    ``sequence_parallel`` additionally shards the sequence dimension of
+    activations over "model" (norm/residual regions where the hidden dim is
+    unsharded).
+
+    ``mesh`` is part of the rule-set contract (``make_decode_rules`` needs
+    it for the KV divisibility check, and callers build both the same way)
+    but train rules are mesh-independent: resolution against the mesh
+    happens per-array in :meth:`ShardingRules.spec`.
+    """
+    del mesh
+    return ShardingRules({
+        # weights
+        "vocab": ("model",),
+        "embed": ("data",),
+        "heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("pod",),
+        "expert_ffn": ("model",),
+        "ssm_heads": ("model",),
+        # activations / caches
+        "batch": ("pod", "data"),
+        "seq": ("model",) if sequence_parallel else (),
+        "heads_act": ("model",),
+        "kv_heads_act": ("model",),
+        "ffn_act": ("model",),
+        "experts_act": ("model",),
+        "ssm_heads_act": ("model",),
+        "vocab_act": ("model",),
+    })
+
+
+def make_decode_rules(mesh, num_kv_heads: int) -> ShardingRules:
+    """KV-head tensor-parallel decode/prefill rules.
+
+    Weights are replicated over "data" (every decode replica in the data
+    dimension holds full weights — no per-step weight collectives) and
+    sharded over "model"; the KV cache shards its head dimension over
+    "model" only when ``num_kv_heads`` divides the model-axis size, else
+    the cache replicates (recorded as a fallback) — partial-head cache
+    shards would corrupt decode_attention's per-head softmax.
+    """
+    tp = dict(mesh.shape).get("model", 1)
+    kv_ok = tp <= 1 or num_kv_heads % tp == 0
+    rules = ShardingRules({
+        # weights
+        "vocab": ("model",),
+        "heads": ("model",),
+        "ffn": ("model",),
+        "expert_ffn": ("model",),
+        "ssm_heads": ("model",),
+        # activations / caches
+        "batch": ("pod", "data"),
+        "heads_act": ("model",),
+        "kv_heads_act": ("model",) if kv_ok else (),
+        "ffn_act": ("model",),
+        "experts_act": ("model",),
+        "ssm_heads_act": ("model",),
+        "vocab_act": ("model",),
+    })
+    if not kv_ok:
+        rules._record("kv_heads_act", "model", num_kv_heads)
+    return rules

@@ -15,6 +15,7 @@ from pathlib import Path
 
 from repro.configs import get_config
 from repro.core.scheduler import SchedulerConfig
+from repro.dist import make_replica_set
 from repro.models import Model, materialize
 from repro.serving import Engine, MoriRouter
 from repro.serving.state_io import restore_snapshot, save_snapshot
@@ -38,10 +39,14 @@ def main() -> None:
 
     cfg = get_config(args.arch).reduced()
     params = materialize(Model(cfg).describe(), seed=0)
+    # one rules object shared by all replicas (repro.dist invariant): a
+    # program migrated between replicas lands on a byte-identical layout
+    replica_set = make_replica_set(args.replicas, num_kv_heads=cfg.num_kv_heads)
     engines = [
         Engine(cfg, params, page_tokens=16, n_device_pages=72,
-               n_host_pages=160, max_slots=3, max_seq=384)
-        for _ in range(args.replicas)
+               n_host_pages=160, max_slots=3, max_seq=384,
+               placement=placement)
+        for placement in replica_set
     ]
     router = MoriRouter(
         engines,

@@ -27,8 +27,10 @@ import numpy as np
 
 from repro.core.radix_tree import TypedRadixTree
 from repro.core.types import Tier, TypeLabel
-from repro.models import Model
+from repro.dist import ReplicaPlacement
+from repro.models import NULL_CTX, Model, ShardCtx
 from repro.models.config import ModelConfig
+from repro.models.params import sharding_tree
 
 
 @dataclass
@@ -69,12 +71,24 @@ class Engine:
         n_host_pages: int = 256,
         max_slots: int = 4,
         max_seq: int = 512,
+        placement: ReplicaPlacement | None = None,
     ):
         assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global_alternating, (
             "the real engine serves dense-cache families; see DESIGN.md"
         )
         self.cfg = cfg
         self.model = Model(cfg)
+        self.placement = placement
+        if placement is not None:
+            # pin the replica's weight copy to its mesh slice under the
+            # shared rules so every replica compiles identical layouts
+            self.ctx = ShardCtx(placement.mesh, placement.rules)
+            p_sh = sharding_tree(
+                self.model.describe(), placement.mesh, placement.rules
+            )
+            params = jax.tree.map(jax.device_put, params, p_sh)
+        else:
+            self.ctx = NULL_CTX
         self.params = params
         self.page_tokens = page_tokens
         self.max_slots = max_slots
@@ -127,7 +141,9 @@ class Engine:
             prefix = {"k": pk[:, None], "v": pv[:, None]}       # [L,1,Sp,KH,HD]
 
         batch = {"tokens": jnp.asarray([suffix], jnp.int32)}
-        logits, cache = self.model.prefill(self.params, batch, prefix=prefix)
+        logits, cache = self.model.prefill(
+            self.params, batch, ctx=self.ctx, prefix=prefix
+        )
         first_token = int(jnp.argmax(logits[0]))
 
         # 3. install into a decode slot
@@ -171,7 +187,9 @@ class Engine:
     # -------------------------------------------------------------- decode
     def _decode_impl(self, params, slot_k, slot_v, tokens, lengths):
         cache = {"k": slot_k, "v": slot_v}
-        logits, new_cache = self.model.decode(params, cache, tokens, lengths)
+        logits, new_cache = self.model.decode(
+            params, cache, tokens, lengths, ctx=self.ctx
+        )
         return jnp.argmax(logits, axis=-1), new_cache["k"], new_cache["v"]
 
     def step(self) -> list[Completion]:

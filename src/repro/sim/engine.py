@@ -246,6 +246,7 @@ class Simulation:
         corpus: list[ProgramTrace],
         *,
         num_replicas: int = 1,
+        placement: "object | None" = None,   # repro.dist.ReplicaSet
         concurrency_per_replica: int = 20,
         cpu_ratio: float = 1.0,
         ssd_ratio: float = 0.0,
@@ -255,6 +256,13 @@ class Simulation:
         sched_config: SchedulerConfig | None = None,
         faults: list[FaultPlan] | None = None,
     ):
+        # a ReplicaSet pins the simulated fleet to a concrete device layout:
+        # replica count comes from the placement; the set stays on the
+        # Simulation so callers can read layout provenance (e.g.
+        # sim.placement.rules.fallbacks) alongside the SimResult
+        self.placement = placement
+        if placement is not None:
+            num_replicas = placement.num_replicas
         self.hw = hw
         self.corpus = corpus
         self.duration = duration_s

@@ -1,0 +1,89 @@
+"""Deterministic fallback for the slice of the hypothesis API this suite
+uses, so the tier-1 suite runs on images where ``hypothesis`` is not
+installed (dependency policy: no network installs in CI containers).
+
+Each test file imports it as::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+Semantics: ``@given`` draws ``max_examples`` pseudo-random examples from a
+seed fixed per test name — no shrinking, no example database, but the same
+property assertions run over the same example stream on every machine.
+When the real hypothesis is present it is always preferred.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _lists(elements, min_size=0, max_size=None):
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(rng):
+        return [elements.draw(rng) for _ in range(rng.randint(min_size, hi))]
+
+    return _Strategy(draw)
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+st = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    sampled_from=_sampled_from,
+    lists=_lists,
+    tuples=_tuples,
+)
+strategies = st
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 100)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in named_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # keep pytest from reading the wrapped signature and treating the
+        # drawn parameters as fixtures
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # image without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.models.layers import blockwise_attention, decode_attention
 

@@ -2,8 +2,11 @@
 from dataclasses import dataclass, field
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # image without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     MoriScheduler,

@@ -1,8 +1,11 @@
 """Trace generator calibration against the paper's §3 statistics, plus IO."""
 import math
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # image without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.traces import (
     busy_phase_durations,

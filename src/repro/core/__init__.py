@@ -1,13 +1,30 @@
 """MORI control plane: idleness metric, three-tier placement, typed eviction.
 
 This package is the paper's primary contribution (§4), implemented once and
-shared by the discrete-event simulator and the real JAX serving engine.
+shared by the discrete-event simulator and the real JAX serving engine. The
+scheduler ↔ runtime contract is the typed action IR in ``repro.core.actions``:
+events in, :class:`PlacementPlan` out, transfers acknowledged through the
+:class:`TransferLedger`.
 """
+from repro.core.actions import (
+    Action,
+    CancelTransfer,
+    Discard,
+    Forward,
+    Migrate,
+    Offload,
+    PlacementPlan,
+    SetLabel,
+    action_from_json,
+    action_to_json,
+    plan_from_json,
+)
 from repro.core.baselines import SMGScheduler, TAOScheduler, TAScheduler
 from repro.core.idleness import IdlenessTracker
+from repro.core.ledger import Channel, TransferLedger, TransferRecord, channel_for
 from repro.core.program import ProgramState
 from repro.core.radix_tree import TypedRadixTree
-from repro.core.scheduler import AgentScheduler, EngineAdapter, MoriScheduler
+from repro.core.scheduler import AgentScheduler, MoriScheduler
 from repro.core.tiers import ReplicaTiers, WaitingQueue
 from repro.core.types import (
     ProgramTrace,
@@ -27,10 +44,17 @@ SCHEDULERS = {
 }
 
 __all__ = [
+    "Action",
     "AgentScheduler",
-    "EngineAdapter",
+    "CancelTransfer",
+    "Channel",
+    "Discard",
+    "Forward",
     "IdlenessTracker",
+    "Migrate",
     "MoriScheduler",
+    "Offload",
+    "PlacementPlan",
     "ProgramState",
     "ProgramTrace",
     "ReplicaTiers",
@@ -38,12 +62,19 @@ __all__ = [
     "SCHEDULERS",
     "SMGScheduler",
     "SchedulerConfig",
+    "SetLabel",
     "Status",
     "TAOScheduler",
     "TAScheduler",
     "Tier",
     "TierCapacity",
+    "TransferLedger",
+    "TransferRecord",
     "TypeLabel",
     "TypedRadixTree",
     "WaitingQueue",
+    "action_from_json",
+    "action_to_json",
+    "channel_for",
+    "plan_from_json",
 ]

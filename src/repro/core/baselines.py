@@ -11,8 +11,9 @@
   treats evicted programs as stateless, so a reload only happens if the
   lightest-loaded replica coincidentally holds the CPU copy.
 
-All implement the same :class:`repro.core.scheduler.AgentScheduler` event API
-so the simulator and benchmarks are policy-agnostic.
+All implement the same :class:`repro.core.scheduler.AgentScheduler` event
+API — events in, :class:`~repro.core.actions.PlacementPlan` out — so the
+simulator and benchmarks are policy-agnostic.
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ from collections import OrderedDict
 
 from repro.core.program import ProgramState
 from repro.core.scheduler import AgentScheduler
-from repro.core.types import Status, Tier, TypeLabel
+from repro.core.types import Status, Tier
 
 
 class SMGScheduler(AgentScheduler):
@@ -34,7 +35,7 @@ class SMGScheduler(AgentScheduler):
         self._fifo: list[str] = []  # gated request order
 
     # ------------------------------------------------------------- events
-    def request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
+    def _on_request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
         prog = self.programs[pid]
         self._account_growth(prog, max(0, input_tokens - prog.context_tokens))
         prog.gate(now)
@@ -43,7 +44,7 @@ class SMGScheduler(AgentScheduler):
             self._fifo.append(pid)
         self._admit(now)
 
-    def request_completed(self, pid: str, output_tokens: int, now: float) -> None:
+    def _on_request_completed(self, pid: str, output_tokens: int, now: float) -> None:
         prog = self.programs[pid]
         self._mark_not_running(prog)
         if prog.replica is not None:
@@ -52,7 +53,7 @@ class SMGScheduler(AgentScheduler):
         self._last_active[pid] = now
         self._admit(now)
 
-    def tick(self, now: float) -> None:
+    def _on_tick(self, now: float) -> None:
         self._admit(now)
 
     # ----------------------------------------------------------- admission
@@ -80,25 +81,36 @@ class SMGScheduler(AgentScheduler):
         if not self._has_slot(target):
             return False
         need = 0 if cached else prog.kv_bytes
-        if need > rep.gpu_free() and not self._lru_evict(rep, need - rep.gpu_free(), now):
+        # growth overflow can leave gpu_free() negative even for a cached
+        # candidate; never let the LRU pass evict the program being admitted
+        if need > rep.gpu_free() and not self._lru_evict(
+            rep, need - rep.gpu_free(), now, keep=prog.program_id
+        ):
             return False
         if not cached:
             if prog.tier is Tier.GPU:  # resident elsewhere: drop old copy
                 old = self.replicas[prog.replica]
                 old.gpu_remove(prog)
-                self.adapter.discard(prog.program_id, old.replica_id, Tier.GPU)
+                self._emit_discard(prog.program_id, old.replica_id, Tier.GPU)
             if prog.home_replica is not None and prog.home_replica != target:
                 prog.metrics.replica_switches += 1
             self.waiting.remove(prog)
             rep.gpu_admit(prog)
             prog.metrics.recomputed_tokens += prog.context_tokens
-        self.adapter.forward(prog.program_id, target, reload=False, recompute=not cached)
+        if cached:
+            self._emit_forward(prog, Tier.GPU)
+        else:
+            self._emit_forward(prog, Tier.WAITING, recompute=True)
         return True
 
-    def _lru_evict(self, rep, need: int, now: float) -> bool:
+    def _lru_evict(self, rep, need: int, now: float, keep: str | None = None) -> bool:
         """Engine-level LRU: evict least-recently-active non-running KV."""
         victims = sorted(
-            (p for p in rep.gpu.values() if p.status is not Status.REASONING),
+            (
+                p
+                for p in rep.gpu.values()
+                if p.status is not Status.REASONING and p.program_id != keep
+            ),
             key=lambda p: self._last_active.get(p.program_id, 0.0),
         )
         freed = 0
@@ -107,7 +119,7 @@ class SMGScheduler(AgentScheduler):
                 break
             freed += v.kv_bytes
             rep.gpu_remove(v)
-            self.adapter.discard(v.program_id, rep.replica_id, Tier.GPU)
+            self._emit_discard(v.program_id, rep.replica_id, Tier.GPU)
             self.waiting.add(v)
             v.metrics.evictions += 1
         return freed >= need
@@ -128,18 +140,18 @@ class TAScheduler(AgentScheduler):
         self._fifo: list[str] = []
 
     # ------------------------------------------------------------- events
-    def request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
+    def _on_request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
         prog = self.programs[pid]
         self._account_growth(prog, max(0, input_tokens - prog.context_tokens))
         prog.gate(now)
         if prog.tier is Tier.GPU and self._has_slot(prog.replica):
-            self.adapter.forward(pid, prog.replica, reload=False, recompute=False)
+            self._emit_forward(prog, Tier.GPU)
             return
         if pid not in self._fifo:
             self._fifo.append(pid)
         self._admit(now)
 
-    def request_completed(self, pid: str, output_tokens: int, now: float) -> None:
+    def _on_request_completed(self, pid: str, output_tokens: int, now: float) -> None:
         prog = self.programs[pid]
         self._mark_not_running(prog)
         if prog.replica is not None:
@@ -149,7 +161,7 @@ class TAScheduler(AgentScheduler):
             self._shrink_to_fit(rep, now)
         self._admit(now)
 
-    def tick(self, now: float) -> None:
+    def _on_tick(self, now: float) -> None:
         for rep in self.replicas:
             self._shrink_to_fit(rep, now)
         self._admit(now)
@@ -171,7 +183,7 @@ class TAScheduler(AgentScheduler):
 
     def _spill(self, rep, victim: ProgramState) -> None:
         """TA discards outright; TA+O overrides to spill into HiCache."""
-        self.adapter.discard(victim.program_id, rep.replica_id, Tier.GPU)
+        self._emit_discard(victim.program_id, rep.replica_id, Tier.GPU)
 
     def _admit(self, now: float) -> None:
         still: list[str] = []
@@ -181,7 +193,7 @@ class TAScheduler(AgentScheduler):
                 continue
             if prog.tier is Tier.GPU:
                 if self._has_slot(prog.replica):
-                    self.adapter.forward(pid, prog.replica, False, False)
+                    self._emit_forward(prog, Tier.GPU)
                 else:
                     still.append(pid)
                 continue
@@ -220,10 +232,11 @@ class TAScheduler(AgentScheduler):
             prog.metrics.replica_switches += 1
         self.waiting.remove(prog)
         rep.gpu_admit(prog)
-        reload = self._try_reload(rep, prog)
-        if not reload:
+        if self._try_reload(rep, prog):
+            self._emit_forward(prog, Tier.CPU)
+        else:
             prog.metrics.recomputed_tokens += prog.context_tokens
-        self.adapter.forward(prog.program_id, rep.replica_id, reload, not reload)
+            self._emit_forward(prog, Tier.WAITING, recompute=True)
         return True
 
     def _try_reload(self, rep, prog: ProgramState) -> bool:
@@ -253,15 +266,15 @@ class TAOScheduler(TAScheduler):
         cap = rep.capacity.cpu_kv_bytes
         size = victim.kv_bytes
         if size > cap:
-            self.adapter.discard(victim.program_id, rep.replica_id, Tier.GPU)
+            self._emit_discard(victim.program_id, rep.replica_id, Tier.GPU)
             return
         while self._hicache_used[rep.replica_id] + size > cap and cache:
             old_pid, old_size = cache.popitem(last=False)  # plain LRU
             self._hicache_used[rep.replica_id] -= old_size
-            self.adapter.discard(old_pid, rep.replica_id, Tier.CPU)
+            self._emit_discard(old_pid, rep.replica_id, Tier.CPU)
         cache[victim.program_id] = size
         self._hicache_used[rep.replica_id] += size
-        self.adapter.offload(victim.program_id, rep.replica_id)
+        self._emit_offload(victim, Tier.GPU, Tier.CPU)
 
     def _try_reload(self, rep, prog: ProgramState) -> bool:
         cache = self._hicache[rep.replica_id]
@@ -271,8 +284,7 @@ class TAOScheduler(TAScheduler):
             for rid, other in self._hicache.items():
                 if prog.program_id in other:
                     self._hicache_used[rid] -= other.pop(prog.program_id)
-                    self.adapter.discard(prog.program_id, rid, Tier.CPU)
+                    self._emit_discard(prog.program_id, rid, Tier.CPU)
             return False
         self._hicache_used[rep.replica_id] -= size
-        prog.metrics.reloaded_bytes += prog.kv_bytes
         return True

@@ -27,6 +27,11 @@ class ProgramState:
     label: TypeLabel = TypeLabel.INACTIVE
     tracker: IdlenessTracker = field(default_factory=IdlenessTracker)
     metrics: ProgramMetrics = field(default_factory=ProgramMetrics)
+    # tokens whose KV has actually been materialized by a completed step —
+    # context_tokens may run ahead of it when a new request's input arrives
+    # before the engine has prefilled it, so transfer sizing (Forward.nbytes)
+    # uses this, not kv_bytes
+    materialized_tokens: int = 0
     # pending request the scheduler is gating (None = no pending work)
     pending_since: float | None = None
     # set once the request was released to the engine; cleared when inference
@@ -35,9 +40,6 @@ class ProgramState:
     # set when a Reasoning program must be demoted after its current step
     # finishes (paper §4.3.1 "lazy demotion")
     lazy_demote: bool = False
-    # promotion sourced the reload from the SSD tier (§7.1 extension): the
-    # runtime bills NVMe instead of PCIe bandwidth; cleared on dispatch
-    reload_src: Tier | None = None
     arrived_at: float = 0.0
     steps_completed: int = 0
     finished: bool = False
@@ -50,6 +52,11 @@ class ProgramState:
     @property
     def kv_bytes(self) -> int:
         return self.context_tokens * self.kv_bytes_per_token
+
+    @property
+    def materialized_bytes(self) -> int:
+        """Bytes of KV that physically exist somewhere (≤ ``kv_bytes``)."""
+        return min(self.materialized_tokens, self.context_tokens) * self.kv_bytes_per_token
 
     @property
     def has_pending(self) -> bool:
@@ -72,6 +79,7 @@ class ProgramState:
 
     def begin_acting(self, now: float, new_tokens: int = 0) -> None:
         self.context_tokens += new_tokens
+        self.materialized_tokens = self.context_tokens
         self.steps_completed += 1
         self.tracker.transition(Status.ACTING, now)
 

@@ -1,30 +1,51 @@
 """MORI scheduling policy (paper §4.3): sticky rebalancing over three tiers.
 
-The scheduler is runtime-agnostic: it consumes program lifecycle events and
-emits placement actions through an :class:`EngineAdapter`. The discrete-event
-simulator (``repro.sim``) and the real JAX serving engine (``repro.serving``)
-both drive *this exact code* — the policy is implemented once.
+The scheduler is runtime-agnostic and *declarative*: it consumes program
+lifecycle events and every event returns a :class:`PlacementPlan` — an
+ordered, immutable batch of typed actions (``Forward`` / ``Offload`` /
+``Discard`` / ``Migrate`` / ``SetLabel`` / ``CancelTransfer``) that the
+runtime executes through its own ``apply_plan`` executor. The
+discrete-event simulator (``repro.sim``) and the real JAX serving engine
+(``repro.serving``) both drive *this exact code* — the policy is
+implemented once, and because plans are data, tests can assert exact
+action sequences from both runtimes on the same trace.
 
-Event flow (runtime -> scheduler):
+Event flow (runtime -> scheduler; every call returns a PlacementPlan
+unless noted):
     program_arrived -> request_arrived -> notify_inference_started
       -> request_completed -> [tool call] -> request_arrived -> ...
       -> program_finished
     tick(now) runs the periodic control loop (default every 5 s).
+    replica_failed / replica_recovered track fleet membership.
+    on_transfer_complete(pid, action_id, now) acknowledges a transfer the
+      runtime finished executing; the scheduler closes the matching
+      :class:`TransferLedger` record.
 
-Action flow (scheduler -> runtime, via EngineAdapter):
-    forward(pid, replica, reload, recompute): release a gated request; the
-        runtime must first reload KV from host (reload=True) or re-prefill
-        the whole context (recompute=True) before decoding.
-    offload(pid, replica):   move the program's KV GPU -> CPU DRAM.
-    discard(pid, replica, tier): drop the KV from the given tier.
-    set_label(pid, replica, label): typed-offloading hint (paper §4.3.2).
+Transfers are asynchronous: when the scheduler emits an ``Offload``, a
+reloading ``Forward``, or a ``Migrate``, it opens a ledger record for the
+bytes on the PCIe or NVMe channel and the runtime acknowledges completion
+later. Until that acknowledgement the scheduler *knows* the source copy is
+still intact — which is how an offload gets cancelled (``CancelTransfer``)
+when a tool call returns early, re-admitting the program warm instead of
+paying a host round trip.
 """
 from __future__ import annotations
 
 import abc
-from typing import Protocol
 
+from repro.core.actions import (
+    Action,
+    CancelTransfer,
+    Discard,
+    Forward,
+    Migrate,
+    Offload,
+    PlacementPlan,
+    SetLabel,
+    _coalesce,
+)
 from repro.core.balancer import ReplicaBalancer
+from repro.core.ledger import TransferLedger, TransferRecord, channel_for
 from repro.core.program import ProgramState
 from repro.core.tiers import ReplicaTiers, WaitingQueue
 from repro.core.types import (
@@ -36,17 +57,13 @@ from repro.core.types import (
 )
 
 
-class EngineAdapter(Protocol):
-    """What the scheduler can ask a runtime to do."""
-
-    def forward(self, pid: str, replica: int, reload: bool, recompute: bool) -> None: ...
-    def offload(self, pid: str, replica: int) -> None: ...
-    def discard(self, pid: str, replica: int | None, tier: Tier) -> None: ...
-    def set_label(self, pid: str, replica: int | None, label: TypeLabel) -> None: ...
-
-
 class AgentScheduler(abc.ABC):
-    """Shared event API for MORI and all baselines (SMG / TA / TA+O)."""
+    """Shared event API for MORI and all baselines (SMG / TA / TA+O).
+
+    Subclasses implement the ``_on_*`` hooks and emit actions through the
+    ``_emit_*`` helpers; the public event methods wrap each hook and drain
+    the staged actions into the returned :class:`PlacementPlan`.
+    """
 
     name: str = "base"
 
@@ -54,89 +71,112 @@ class AgentScheduler(abc.ABC):
         self,
         num_replicas: int,
         capacity: TierCapacity,
-        adapter: EngineAdapter,
         config: SchedulerConfig | None = None,
     ):
         self.config = config or SchedulerConfig()
-        self.adapter = adapter
         self.replicas = [
             ReplicaTiers(replica_id=i, capacity=capacity) for i in range(num_replicas)
         ]
         self.waiting = WaitingQueue()
         self.programs: dict[str, ProgramState] = {}
         self.balancer = ReplicaBalancer(self.replicas, self.config)
+        self.ledger = TransferLedger()
         self._running: dict[int, set[str]] = {i: set() for i in range(num_replicas)}
+        self._staged: list[Action] = []
+        self._next_action_id = 1
+        self._now = 0.0
+        # programs admitted to the GPU queue whose KV has *not* been moved
+        # yet (no free engine slot at admission time): maps pid -> the tier
+        # the bytes still physically occupy, so the eventual Forward carries
+        # the true source instead of pretending the KV is warm.
+        self._pending_source: dict[str, Tier] = {}
 
     # -------------------------------------------------------------- events
     def program_arrived(self, pid: str, kv_bytes_per_token: int, now: float) -> ProgramState:
+        """Register a new program (emits no actions)."""
         prog = ProgramState(pid, kv_bytes_per_token, arrived_at=now)
         prog.set_window(self.config.idleness_window)
         self.programs[pid] = prog
         self.waiting.add(prog)
         return prog
 
-    @abc.abstractmethod
-    def request_arrived(self, pid: str, input_tokens: int, now: float) -> None: ...
+    def request_arrived(self, pid: str, input_tokens: int, now: float) -> PlacementPlan:
+        self._now = now
+        self._on_request_arrived(pid, input_tokens, now)
+        return self._drain(now)
 
     def notify_inference_started(self, pid: str, now: float) -> None:
+        """The runtime started executing a forwarded request (no actions)."""
         prog = self.programs[pid]
         prog.begin_reasoning(now)
         if prog.replica is not None:
             self._running[prog.replica].add(pid)
 
-    @abc.abstractmethod
-    def request_completed(self, pid: str, output_tokens: int, now: float) -> None: ...
+    def request_completed(self, pid: str, output_tokens: int, now: float) -> PlacementPlan:
+        self._now = now
+        self._on_request_completed(pid, output_tokens, now)
+        return self._drain(now)
 
-    def program_finished(self, pid: str, now: float) -> None:
+    def program_finished(self, pid: str, now: float) -> PlacementPlan:
+        self._now = now
         prog = self.programs.pop(pid, None)
-        if prog is None:
-            return
-        prog.finished = True
-        if prog.replica is not None:
-            self._running[prog.replica].discard(pid)
-        self._release(prog)
+        if prog is not None:
+            prog.finished = True
+            if prog.replica is not None:
+                self._running[prog.replica].discard(pid)
+            self._release(prog)
+            self.ledger.drop_pid(pid)
+        return self._drain(now)
+
+    def tick(self, now: float) -> PlacementPlan:
+        self._now = now
+        self._on_tick(now)
+        return self._drain(now)
+
+    def on_transfer_complete(self, pid: str, action_id: int, now: float) -> PlacementPlan:
+        """Runtime acknowledgement that a transfer finished. Closes the
+        ledger record; unknown ids (cancelled, or dropped with a failed
+        replica) are tolerated."""
+        self._now = now
+        self.ledger.complete(action_id)
+        return self._drain(now)
 
     @abc.abstractmethod
-    def tick(self, now: float) -> None: ...
+    def _on_request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
+        ...
+
+    @abc.abstractmethod
+    def _on_request_completed(self, pid: str, output_tokens: int, now: float) -> None:
+        ...
+
+    @abc.abstractmethod
+    def _on_tick(self, now: float) -> None:
+        ...
 
     # ------------------------------------------------------- fault handling
-    def replica_failed(self, replica_id: int, now: float) -> list[str]:
+    def replica_failed(self, replica_id: int, now: float) -> PlacementPlan:
         """Node failure: all KV on the replica is lost. Its programs drop to
         the Waiting queue and will be re-admitted elsewhere via the normal
-        recompute path — exactly MORI's Waiting-tier semantics, which is what
-        makes the design restart-tolerant. Returns the affected program ids.
-        """
+        recompute path — exactly MORI's Waiting-tier semantics, which is
+        what makes the design restart-tolerant. The returned plan carries a
+        ``Discard`` per lost KV copy (one per program and tier)."""
+        self._now = now
         rep = self.replicas[replica_id]
-        affected: list[str] = []
-        for prog in list(rep.gpu.values()):
-            rep.gpu_remove(prog)
-            self.adapter.discard(prog.program_id, replica_id, Tier.GPU)
+        for tier, prog in rep.evict_all():
+            self._emit_discard(prog.program_id, replica_id, tier)
             self.waiting.add(prog)
             prog.metrics.evictions += 1
             prog.dispatched = False  # any in-flight forward died with the node
             prog.lazy_demote = False
-            affected.append(prog.program_id)
-        for prog in list(rep.cpu.values()):
-            rep.cpu_remove(prog)
-            self.adapter.discard(prog.program_id, replica_id, Tier.CPU)
-            self.waiting.add(prog)
-            prog.metrics.evictions += 1
-            prog.dispatched = False
-            affected.append(prog.program_id)
-        for prog in list(rep.ssd.values()):
-            rep.ssd_remove(prog)
-            self.adapter.discard(prog.program_id, replica_id, Tier.SSD)
-            self.waiting.add(prog)
-            prog.metrics.evictions += 1
-            prog.dispatched = False
-            affected.append(prog.program_id)
+            self._pending_source.pop(prog.program_id, None)
         for pid in list(self._running[replica_id]):
             self._running[replica_id].discard(pid)
             prog = self.programs.get(pid)
             if prog is not None and not prog.finished:
                 prog.gate(now)  # in-flight request will be re-issued
         self.balancer.mark_failed(replica_id)
-        return affected
+        self.ledger.drop_replica(replica_id)
+        return self._drain(now)
 
     def replica_recovered(self, replica_id: int) -> None:
         self.balancer.mark_recovered(replica_id)
@@ -149,20 +189,92 @@ class AgentScheduler(abc.ABC):
     def running_count(self, replica: int) -> int:
         return len(self._running[replica])
 
+    # ----------------------------------------------------------- emission
+    def _drain(self, now: float) -> PlacementPlan:
+        actions, self._staged = _coalesce(self._staged), []
+        return PlacementPlan(now=now, actions=tuple(actions))
+
+    def _next_id(self) -> int:
+        aid = self._next_action_id
+        self._next_action_id += 1
+        return aid
+
+    def _emit_forward(
+        self, prog: ProgramState, source_tier: Tier, recompute: bool = False
+    ) -> None:
+        prog.dispatched = True
+        # a reload moves only the KV that was actually materialized before
+        # the offload — not the new input tokens the engine has yet to see
+        nbytes = prog.materialized_bytes if source_tier in (Tier.CPU, Tier.SSD) else 0
+        act = Forward(
+            self._next_id(), prog.program_id, prog.replica,
+            source_tier, recompute, nbytes,
+        )
+        if nbytes:
+            prog.metrics.reloaded_bytes += nbytes
+            self.ledger.open(TransferRecord(
+                act.action_id, prog.program_id, prog.replica, "reload",
+                channel_for(source_tier), nbytes, source_tier, Tier.GPU,
+                self._now,
+            ))
+        self._staged.append(act)
+
+    def _emit_offload(self, prog: ProgramState, src_tier: Tier, dst_tier: Tier) -> None:
+        # like reloads, offloads move only the KV that physically exists —
+        # context growth from a not-yet-prefilled input has no pages to copy
+        act = Offload(
+            self._next_id(), prog.program_id, prog.replica,
+            src_tier, dst_tier, prog.materialized_bytes,
+        )
+        if act.nbytes:
+            # offloads bill the channel the bytes are *read* from: SSD-bound
+            # writes are staged through host DRAM, so the device/host DMA is
+            # the contended resource, while the NVMe channel is reserved for
+            # latency-critical reads (reloading Forwards)
+            self.ledger.open(TransferRecord(
+                act.action_id, prog.program_id, prog.replica, "offload",
+                channel_for(src_tier), act.nbytes, src_tier, dst_tier,
+                self._now,
+            ))
+        self._staged.append(act)
+
+    def _emit_discard(self, pid: str, replica: int | None, tier: Tier) -> None:
+        self._staged.append(Discard(self._next_id(), pid, replica, tier))
+
+    def _emit_migrate(self, prog: ProgramState, src: int, dst: int) -> None:
+        act = Migrate(
+            self._next_id(), prog.program_id, src, dst, prog.materialized_bytes
+        )
+        if act.nbytes:
+            self.ledger.open(TransferRecord(
+                act.action_id, prog.program_id, dst, "migrate",
+                channel_for(Tier.CPU), act.nbytes, Tier.CPU, Tier.CPU,
+                self._now,
+            ))
+        self._staged.append(act)
+
+    def _emit_cancel(self, pid: str, rec: TransferRecord) -> None:
+        self.ledger.cancel(rec.action_id)
+        self._staged.append(
+            CancelTransfer(self._next_id(), pid, rec.replica, rec.action_id)
+        )
+
+    def _set_label(self, prog: ProgramState, label: TypeLabel) -> None:
+        if prog.label is not label:
+            prog.label = label
+            self._staged.append(
+                SetLabel(self._next_id(), prog.program_id, prog.replica, label)
+            )
+
     # ------------------------------------------------------------ plumbing
     def _release(self, prog: ProgramState) -> None:
         """Drop a program's KV from wherever it lives."""
         for rep in self.replicas:
-            if prog.program_id in rep.gpu:
-                rep.gpu_remove(prog)
-                self.adapter.discard(prog.program_id, rep.replica_id, Tier.GPU)
-            if prog.program_id in rep.cpu:
-                rep.cpu_remove(prog)
-                self.adapter.discard(prog.program_id, rep.replica_id, Tier.CPU)
-            if prog.program_id in rep.ssd:
-                rep.ssd_remove(prog)
-                self.adapter.discard(prog.program_id, rep.replica_id, Tier.SSD)
+            tier = rep.evict(prog)
+            if tier is not None:
+                self._emit_discard(prog.program_id, rep.replica_id, tier)
         self.waiting.remove(prog)
+        self._pending_source.pop(prog.program_id, None)
         prog.tier = Tier.NONE
         prog.replica = None
 
@@ -172,11 +284,6 @@ class AgentScheduler(abc.ABC):
         if prog.replica is not None:
             self.replicas[prog.replica].grow(prog, new_tokens)
         prog.context_tokens += new_tokens
-
-    def _set_label(self, prog: ProgramState, label: TypeLabel) -> None:
-        if prog.label is not label:
-            prog.label = label
-            self.adapter.set_label(prog.program_id, prog.replica, label)
 
     def _mark_not_running(self, prog: ProgramState) -> None:
         if prog.replica is not None:
@@ -189,17 +296,17 @@ class MoriScheduler(AgentScheduler):
     name = "mori"
 
     # ------------------------------------------------------------- events
-    def request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
+    def _on_request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
         prog = self.programs[pid]
         new_tokens = max(0, input_tokens - prog.context_tokens)
         self._account_growth(prog, new_tokens)
         prog.gate(now)
         if prog.tier is Tier.GPU and self._has_slot(prog.replica):
-            self._dispatch(prog, reload=False, recompute=False)
-        elif self.config.eager_promote:
+            self._dispatch(prog)
+        elif not self._cancel_inflight_offload(prog) and self.config.eager_promote:
             self._promote_pass(now)
 
-    def request_completed(self, pid: str, output_tokens: int, now: float) -> None:
+    def _on_request_completed(self, pid: str, output_tokens: int, now: float) -> None:
         prog = self.programs[pid]
         self._mark_not_running(prog)
         self._account_growth(prog, 0)  # growth applied below via begin_acting
@@ -212,13 +319,39 @@ class MoriScheduler(AgentScheduler):
         if self.config.eager_promote:
             self._promote_pass(now)
 
-    def tick(self, now: float) -> None:
+    def _on_tick(self, now: float) -> None:
         for rep in self.replicas:
             self._demote_pass(rep, now)
             self._cpu_overflow_pass(rep, now)
             self._ssd_overflow_pass(rep, now)
         self._promote_pass(now)
+        if self.config.migrate_on_pressure:
+            self._migrate_pass(now)
         self._sync_labels()
+
+    # ------------------------------------------------------ cancel on return
+    def _cancel_inflight_offload(self, prog: ProgramState) -> bool:
+        """Early tool return: the program's offload is still sitting in the
+        runtime's transfer queue, so its KV never actually left the GPU.
+        Cancel the transfer and re-admit warm — no reload, no recompute.
+        Only offloads sourced from the GPU qualify (a CPU→SSD sink's bytes
+        were never on the GPU in the first place)."""
+        if prog.tier not in (Tier.CPU, Tier.SSD):
+            return False
+        rec = self.ledger.open_offload(prog.program_id)
+        if rec is None or rec.src_tier is not Tier.GPU:
+            return False
+        rep = self.replicas[prog.replica]
+        if rep.gpu_free() < prog.kv_bytes:
+            return False
+        rep.remove(prog.tier, prog)
+        self._emit_cancel(prog.program_id, rec)
+        rep.gpu_admit(prog)
+        prog.metrics.cancelled_offloads += 1
+        self._set_label(prog, TypeLabel.BUSY)
+        if self._has_slot(rep.replica_id):
+            self._dispatch(prog)
+        return True
 
     # ---------------------------------------------------------- demotions
     def _demote_pass(self, rep: ReplicaTiers, now: float) -> None:
@@ -237,8 +370,12 @@ class MoriScheduler(AgentScheduler):
         for victim in victims:
             if rep.gpu_used - pending_free <= rep.capacity.gpu_kv_bytes:
                 break
-            if victim.status is Status.REASONING:
-                # lazy demotion: finish the in-flight step first
+            if victim.status is Status.REASONING or victim.dispatched:
+                # lazy demotion: finish the in-flight step first. A
+                # dispatched-but-not-started program is in the same boat —
+                # its reload/recompute Forward is already executing, so
+                # demoting it now would move KV out from under the runtime
+                # and double-bill the transfer channel.
                 if not victim.lazy_demote:
                     victim.lazy_demote = True
                     pending_free += victim.kv_bytes
@@ -247,20 +384,41 @@ class MoriScheduler(AgentScheduler):
 
     def _demote(self, prog: ProgramState, now: float) -> None:
         """GPU -> CPU if DRAM permits, else SSD (§7.1 extension, when
-        enabled), else GPU -> Waiting."""
+        enabled), else GPU -> Waiting.
+
+        If the program was admitted to the GPU queue but its KV was never
+        actually moved (``_pending_source``), the bytes still sit at their
+        old tier: demoting back there is free (no transfer emitted), and
+        demoting a never-recomputed Waiting re-admission is a pure
+        accounting rollback."""
         rep = self.replicas[prog.replica]
+        src = self._pending_source.pop(prog.program_id, Tier.GPU)
         rep.gpu_remove(prog)
         prog.metrics.demotions += 1
+        if src is Tier.WAITING:
+            # recompute never ran: nothing resident anywhere
+            self.waiting.add(prog)
+            self._set_label(prog, TypeLabel.INACTIVE)
+            return
+        if src is not Tier.GPU:
+            # deferred promotion rolled back: the bytes still sit at their
+            # old tier, so re-admitting there is free (no transfer emitted)
+            free = rep.cpu_free if src is Tier.CPU else rep.ssd_free
+            admit = rep.cpu_admit if src is Tier.CPU else rep.ssd_admit
+            if free() >= prog.kv_bytes:
+                admit(prog)
+                self._set_label(prog, TypeLabel.IDLE)
+                return
         if rep.cpu_free() >= prog.kv_bytes:
             rep.cpu_admit(prog)
-            self.adapter.offload(prog.program_id, rep.replica_id)
+            self._emit_offload(prog, src, Tier.CPU)
             self._set_label(prog, TypeLabel.IDLE)
         elif rep.ssd_free() >= prog.kv_bytes and self._ssd_worthwhile(prog):
             rep.ssd_admit(prog)
-            self.adapter.offload(prog.program_id, rep.replica_id)
+            self._emit_offload(prog, src, Tier.SSD)
             self._set_label(prog, TypeLabel.IDLE)
         else:
-            self.adapter.discard(prog.program_id, rep.replica_id, Tier.GPU)
+            self._emit_discard(prog.program_id, rep.replica_id, src)
             self.waiting.add(prog)
             prog.metrics.evictions += 1
             self._set_label(prog, TypeLabel.INACTIVE)
@@ -287,14 +445,14 @@ class MoriScheduler(AgentScheduler):
                     continue
                 rep.cpu_remove(victim)
                 rep.ssd_admit(victim)
-                self.adapter.offload(victim.program_id, rep.replica_id)
+                self._emit_offload(victim, Tier.CPU, Tier.SSD)
                 self._set_label(victim, TypeLabel.IDLE)
         victims = sorted(rep.cpu.values(), key=lambda p: p.idleness(now))
         for victim in victims:
             if rep.cpu_overflow() <= 0:
                 break
             rep.cpu_remove(victim)
-            self.adapter.discard(victim.program_id, rep.replica_id, Tier.CPU)
+            self._emit_discard(victim.program_id, rep.replica_id, Tier.CPU)
             self.waiting.add(victim)
             victim.metrics.evictions += 1
             self._set_label(victim, TypeLabel.INACTIVE)
@@ -321,7 +479,7 @@ class MoriScheduler(AgentScheduler):
             if rep.ssd_overflow() <= 0:
                 break
             rep.ssd_remove(victim)
-            self.adapter.discard(victim.program_id, rep.replica_id, Tier.SSD)
+            self._emit_discard(victim.program_id, rep.replica_id, Tier.SSD)
             self.waiting.add(victim)
             victim.metrics.evictions += 1
             self._set_label(victim, TypeLabel.INACTIVE)
@@ -347,8 +505,8 @@ class MoriScheduler(AgentScheduler):
         for prog in p1:
             self._try_promote_cpu(prog, now)
 
-        # --- P1b: SSD -> GPU (§7.1 extension), affinity-preserving; reload
-        #     is NVMe-speed (the runtime reads prog.tier before forward)
+        # --- P1b: SSD -> GPU (§7.1 extension), affinity-preserving; the
+        #     Forward's source_tier bills the reload to the NVMe channel
         p1b = [
             p
             for rep in self.replicas
@@ -390,7 +548,7 @@ class MoriScheduler(AgentScheduler):
             for prog in gated:
                 if not self._has_slot(rep.replica_id):
                     break
-                self._dispatch(prog, reload=False, recompute=False)
+                self._dispatch(prog)
 
     def _try_promote_cpu(self, prog: ProgramState, now: float) -> bool:
         rep = self.replicas[prog.replica]
@@ -401,7 +559,9 @@ class MoriScheduler(AgentScheduler):
         prog.metrics.promotions += 1
         self._set_label(prog, TypeLabel.BUSY)
         if self._has_slot(rep.replica_id):
-            self._dispatch(prog, reload=True, recompute=False)
+            self._emit_forward(prog, Tier.CPU)
+        else:
+            self._pending_source[prog.program_id] = Tier.CPU
         return True
 
     def _try_promote_ssd(self, prog: ProgramState, now: float) -> bool:
@@ -409,12 +569,13 @@ class MoriScheduler(AgentScheduler):
         if not self._make_room(rep, prog, now):
             return False
         rep.ssd_remove(prog)
-        prog.reload_src = Tier.SSD
         rep.gpu_admit(prog)
         prog.metrics.promotions += 1
         self._set_label(prog, TypeLabel.BUSY)
         if self._has_slot(rep.replica_id):
-            self._dispatch(prog, reload=True, recompute=False)
+            self._emit_forward(prog, Tier.SSD)
+        else:
+            self._pending_source[prog.program_id] = Tier.SSD
         return True
 
     def _try_admit_waiting(self, prog: ProgramState, now: float) -> bool:
@@ -429,10 +590,13 @@ class MoriScheduler(AgentScheduler):
             prog.metrics.replica_switches += 1
         rep.gpu_admit(prog)
         prog.metrics.promotions += 1
-        prog.metrics.recomputed_tokens += prog.context_tokens
         self._set_label(prog, TypeLabel.BUSY)
+        # recomputed_tokens is billed at dispatch time (_dispatch): a
+        # deferred admission can still be rolled back by a demotion before
+        # any prefill happens, and must not count twice on re-admission
+        self._pending_source[prog.program_id] = Tier.WAITING
         if self._has_slot(rep.replica_id):
-            self._dispatch(prog, reload=False, recompute=True)
+            self._dispatch(prog)
         return True
 
     def _make_room(
@@ -478,6 +642,40 @@ class MoriScheduler(AgentScheduler):
             self._demote(victim, now)
         return True
 
+    # ----------------------------------------------------------- migration
+    def _migrate_pass(self, now: float) -> None:
+        """Beyond-paper: when a pending CPU-resident program cannot fit its
+        home GPU but another healthy replica has abundant room, move the
+        DRAM copy there (``Migrate``) and promote on arrival — a reload on
+        the new replica instead of a full recompute. Off by default
+        (``migrate_on_pressure``); paper-faithful benchmarks keep affinity
+        strictly sticky."""
+        for rep in self.replicas:
+            stuck = [
+                p for p in list(rep.cpu.values())
+                if p.has_pending and not p.dispatched
+                and rep.gpu_free() < p.kv_bytes
+            ]
+            for prog in stuck:
+                if self.ledger.open_offload(prog.program_id) is not None:
+                    # its DRAM copy hasn't physically landed yet — migrating
+                    # now would ship bytes that are still on the source GPU
+                    continue
+                others = [
+                    r for r in self.balancer.healthy()
+                    if r.replica_id != rep.replica_id
+                    and r.gpu_free() >= prog.kv_bytes
+                    and r.cpu_free() >= prog.kv_bytes
+                ]
+                if not others:
+                    continue
+                dst = max(others, key=lambda r: r.gpu_free())
+                rep.cpu_remove(prog)
+                self._emit_migrate(prog, rep.replica_id, dst.replica_id)
+                dst.cpu_admit(prog)
+                prog.metrics.replica_switches += 1
+                self._try_promote_cpu(prog, now)
+
     # ------------------------------------------------------------ dispatch
     def _has_slot(self, replica: int | None) -> bool:
         if replica is None:
@@ -485,11 +683,14 @@ class MoriScheduler(AgentScheduler):
         cap = self.config.max_running
         return cap is None or len(self._running[replica]) < cap
 
-    def _dispatch(self, prog: ProgramState, reload: bool, recompute: bool) -> None:
-        if reload:
-            prog.metrics.reloaded_bytes += prog.kv_bytes
-        prog.dispatched = True
-        self.adapter.forward(prog.program_id, prog.replica, reload, recompute)
+    def _dispatch(self, prog: ProgramState) -> None:
+        """Forward a GPU-queue program, sourcing the KV from wherever it
+        physically still lives (a deferred promotion keeps its true source
+        in ``_pending_source``)."""
+        src = self._pending_source.pop(prog.program_id, Tier.GPU)
+        if src is Tier.WAITING:
+            prog.metrics.recomputed_tokens += prog.context_tokens
+        self._emit_forward(prog, src, recompute=src is Tier.WAITING)
 
     def _sync_labels(self) -> None:
         for rep in self.replicas:

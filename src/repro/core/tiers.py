@@ -8,6 +8,7 @@ not in the container.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Iterator
 
 from repro.core.program import ProgramState
 from repro.core.types import Tier, TierCapacity
@@ -83,6 +84,41 @@ class ReplicaTiers:
 
     def ssd_overflow(self) -> int:
         return max(0, self.ssd_used - self.capacity.ssd_kv_bytes)
+
+    # --------------------------------------------------- tier-generic views
+    def queues(self) -> Iterator[tuple[Tier, dict[str, ProgramState]]]:
+        """The hardware-backed queues in demotion order. Adding a tier means
+        adding one entry here — every tier-generic loop picks it up."""
+        yield Tier.GPU, self.gpu
+        yield Tier.CPU, self.cpu
+        yield Tier.SSD, self.ssd
+
+    def remove(self, tier: Tier, prog: ProgramState) -> None:
+        """Remove ``prog`` from the named tier's queue (byte-accounted)."""
+        if tier is Tier.GPU:
+            self.gpu_remove(prog)
+        elif tier is Tier.CPU:
+            self.cpu_remove(prog)
+        else:
+            self.ssd_remove(prog)
+
+    def evict(self, prog: ProgramState) -> Tier | None:
+        """Remove ``prog`` from whichever queue holds it; returns the tier
+        it occupied, or None if it was not resident on this replica."""
+        for tier, q in self.queues():
+            if prog.program_id in q:
+                self.remove(tier, prog)
+                return tier
+        return None
+
+    def evict_all(self) -> Iterator[tuple[Tier, ProgramState]]:
+        """Drain every resident program, yielding ``(tier, prog)`` pairs
+        after removal — the single code path for whole-replica teardown
+        (node failure), replacing three copy-pasted per-tier loops."""
+        for tier, q in self.queues():
+            for prog in list(q.values()):
+                self.remove(tier, prog)
+                yield tier, prog
 
     # ------------------------------------------------------------- growth
     def grow(self, prog: ProgramState, new_tokens: int) -> None:

@@ -95,6 +95,11 @@ class SchedulerConfig:
     # step latency exceeds the fleet median (beyond-paper, off by default
     # in paper-faithful benchmarks).
     straggler_penalty: float = 0.0
+    # beyond-paper: when a pending CPU-resident program cannot fit its home
+    # GPU, move its DRAM copy to a roomier replica (a ``Migrate`` action)
+    # instead of waiting — breaks strict affinity, so off by default. The
+    # real router rejects it (engines cannot move KV across processes yet).
+    migrate_on_pressure: bool = False
     # §7.1 SSD tier, cost-aware guard (beyond the paper's proposal): a
     # program sinks to SSD only if reloading its KV from NVMe would beat
     # recomputing it — kv_bytes/ssd_bw < context_tokens/recompute_rate.
@@ -123,6 +128,9 @@ class ProgramMetrics:
     recomputed_tokens: int = 0
     reloaded_bytes: int = 0
     gated_time_s: float = 0.0
+    # offloads aborted mid-flight because the tool call returned before the
+    # bytes left the transfer queue (plan/ack protocol, CancelTransfer)
+    cancelled_offloads: int = 0
 
 
 @dataclass

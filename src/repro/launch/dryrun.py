@@ -26,7 +26,7 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
+import jax  # noqa: F401  (deliberate early init: locks device count under XLA_FLAGS)
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.hlo_cost import analyze as analyze_hlo

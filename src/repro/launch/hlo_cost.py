@@ -201,7 +201,6 @@ class _Coster:
         pairs are (consuming op, immediate value name it consumed), so the
         caller can tell which operand slot the value reached.
         """
-        by_name = {o.name: o for o in comp.ops}
         users_of: dict[str, list[_Op]] = {}
         for o in comp.ops:
             for ref in o.operands:

@@ -8,7 +8,6 @@ ShapeDtypeStructs — nothing here allocates device memory (dry-run contract).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ from repro.dist.sharding import (
 )
 from repro.models import Model, ShardCtx, abstract
 from repro.models.config import SHAPES, ModelConfig, ShapeConfig
-from repro.models.params import Leaf, is_leaf, sharding_tree, spec_tree
+from repro.models.params import Leaf, is_leaf, sharding_tree
 from repro.train.optimizer import adamw_update, describe_opt_state
 
 

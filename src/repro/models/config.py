@@ -1,7 +1,7 @@
 """Unified model configuration covering all 10 assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)
@@ -82,7 +82,6 @@ class ModelConfig:
         if self.family == "hybrid":
             n_shared = self.num_layers // max(1, self.shared_attn_period)
             return n_shared * 2 * self.num_kv_heads * self.hybrid_head_dim * b
-        layers = self.num_layers + self.encoder_layers
         return self.num_layers * 2 * self.num_kv_heads * self.head_dim * b
 
     @property

@@ -13,7 +13,6 @@ softcap, GQA, cross-attention (whisper) and QKV bias (qwen1.5) are supported.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -459,7 +458,6 @@ def describe_mamba_block(cfg: ModelConfig):
 def _mamba_split(cfg: ModelConfig, zxbcdt):
     inner = cfg.ssm_inner
     n = cfg.ssm_state
-    h = cfg.ssm_heads
     z = zxbcdt[..., :inner]
     xBC = zxbcdt[..., inner : 2 * inner + 2 * n]
     dt = zxbcdt[..., 2 * inner + 2 * n :]

@@ -8,16 +8,12 @@ adaptation of paged GPU caches, see DESIGN.md §2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.config import ModelConfig
 from repro.models.layers import (
     NULL_CTX,
-    ShardCtx,
     apply_dense_block,
     apply_ffn,
     apply_mamba_block,
@@ -26,7 +22,6 @@ from repro.models.layers import (
     decode_attention,
     describe_attention,
     describe_dense_block,
-    describe_ffn,
     describe_mamba_block,
     describe_shared_block,
     rmsnorm,

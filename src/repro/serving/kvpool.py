@@ -9,9 +9,8 @@ are identical, only the wire is missing).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,20 +1,48 @@
 """MORI router over real engine replicas (the paper's Fig. 6 front door).
 
-The router implements :class:`EngineAdapter`: the scheduler's placement
-actions become real page movements in each engine's two-tier pool. Workload
-replay runs on a *virtual clock* (tool-call sleeps advance time instantly;
-inference advances it by the trace's recorded reasoning wall-time) while the
-engine compute itself is real JAX execution — so policy behaviour is timed
-faithfully and the data plane actually runs.
+The router is the real-engine executor of the scheduler's
+:class:`~repro.core.actions.PlacementPlan` protocol: every lifecycle event
+returns a plan, :meth:`MoriRouter.apply_plan` turns its actions into real
+page movements in each engine's two-tier pool, and — because engine
+transfers here are synchronous — each transfer-bearing action is
+acknowledged back to the scheduler immediately via
+``on_transfer_complete``, keeping the :class:`~repro.core.ledger.
+TransferLedger` empty between events. Workload replay runs on a *virtual
+clock* (tool-call sleeps advance time instantly; inference advances it by
+the trace's recorded reasoning wall-time) while the engine compute itself
+is real JAX execution — so policy behaviour is timed faithfully and the
+data plane actually runs.
+
+Action semantics on the real path:
+
+* ``Forward(source_tier=GPU)`` — warm: submit against the cached pages.
+* ``Forward(source_tier=CPU)`` — reload host pages over PCIe, then submit.
+* ``Forward(source_tier=SSD)`` — reload billed to the NVMe channel
+  (``RouterMetrics.nvme_reloaded_pages``); previously this was silently
+  mis-accounted as PCIe via the mutable ``reload_src`` side-channel.
+* ``Forward(recompute=True)`` — Waiting-tier re-admission: the program's
+  stale pages (if any survived) are dropped so the engine genuinely
+  re-prefills the full context; previously the flag was ignored.
+* ``Migrate`` — rejected: separate engine processes cannot exchange pages.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
-from repro.core.types import ProgramTrace, Tier, TypeLabel
+from repro.core.actions import (
+    Action,
+    CancelTransfer,
+    Discard,
+    Forward,
+    Migrate,
+    Offload,
+    PlacementPlan,
+    SetLabel,
+)
+from repro.core.types import ProgramTrace, Tier
 from repro.serving.engine import Engine, EngineRequest
 
 
@@ -25,7 +53,9 @@ class RouterMetrics:
     cached_tokens: int = 0
     prefilled_tokens: int = 0
     offloaded_pages: int = 0
-    reloaded_pages: int = 0
+    reloaded_pages: int = 0          # PCIe-billed (CPU-tier) reloads
+    nvme_reloaded_pages: int = 0     # NVMe-billed (SSD-tier) reloads
+    recompute_submits: int = 0
     gated_events: int = 0
 
     @property
@@ -44,7 +74,9 @@ class MoriRouter:
         scheduler: str = "mori",
         gpu_capacity_bytes: int | None = None,
         cpu_capacity_bytes: int | None = None,
+        ssd_capacity_bytes: int = 0,
         config: SchedulerConfig | None = None,
+        record_plans: bool = False,
     ):
         self.engines = engines
         cfg0 = engines[0].cfg
@@ -52,38 +84,84 @@ class MoriRouter:
             cfg0.num_layers * 2 * cfg0.num_kv_heads * cfg0.head_dim * 2
         )
         pool = engines[0].pool
-        gpu_cap = gpu_capacity_bytes or (
-            pool.n_device_pages * pool.page_bytes
+        gpu_cap = (
+            gpu_capacity_bytes
+            if gpu_capacity_bytes is not None
+            else pool.n_device_pages * pool.page_bytes
         )
-        cpu_cap = cpu_capacity_bytes or (pool.n_host_pages * pool.page_bytes)
+        cpu_cap = (
+            cpu_capacity_bytes
+            if cpu_capacity_bytes is not None
+            else pool.n_host_pages * pool.page_bytes
+        )
+        config = config or SchedulerConfig(tick_interval_s=5.0)
+        if config.migrate_on_pressure:
+            raise ValueError(
+                "migrate_on_pressure is simulator-only: real engine replicas "
+                "are separate processes and cannot exchange KV pages"
+            )
         self.sched = SCHEDULERS[scheduler](
             len(engines),
-            TierCapacity(gpu_cap, cpu_cap),
-            self,
-            config or SchedulerConfig(tick_interval_s=5.0),
+            TierCapacity(gpu_cap, cpu_cap, ssd_capacity_bytes),
+            config,
         )
         self.metrics = RouterMetrics()
+        self.record_plans = record_plans
+        self.action_log: list[Action] = []
         self._pending: dict[str, tuple[EngineRequest, int]] = {}
-        self._dispatched: dict[str, int] = {}
+        self._dispatched: dict[str, Forward] = {}
 
-    # ------------------------------------------------------- EngineAdapter
-    def forward(self, pid: str, replica: int, reload: bool, recompute: bool) -> None:
-        req, _ = self._pending[pid]
-        eng = self.engines[replica]
-        if reload:
-            self.metrics.reloaded_pages += eng.reload_program(pid)
-        self._dispatched[pid] = replica
+    # ------------------------------------------------------- plan executor
+    def apply_plan(self, plan: PlacementPlan) -> None:
+        """Execute a scheduler plan as real page movements, acknowledging
+        each transfer synchronously."""
+        if self.record_plans and plan.actions:
+            self.action_log.extend(plan.actions)
+        for act in plan:
+            if isinstance(act, Forward):
+                self._exec_forward(act, plan.now)
+            elif isinstance(act, Offload):
+                self.metrics.offloaded_pages += self.engines[
+                    act.replica
+                ].offload_program(act.pid)
+                self._ack(act.pid, act.action_id, plan.now)
+            elif isinstance(act, Discard):
+                if act.replica is not None:
+                    # the logical SSD tier is backed by the host pool on the
+                    # real path — freeing it frees host pages
+                    tier = Tier.CPU if act.tier is Tier.SSD else act.tier
+                    self.engines[act.replica].discard_program(act.pid, tier)
+            elif isinstance(act, SetLabel):
+                if act.replica is not None:
+                    self.engines[act.replica].set_label(act.pid, act.label)
+            elif isinstance(act, CancelTransfer):
+                pass  # transfers are synchronous here: never still queued
+            elif isinstance(act, Migrate):
+                raise RuntimeError(
+                    "Migrate reached the real router; construct the scheduler "
+                    "with migrate_on_pressure=False"
+                )
 
-    def offload(self, pid: str, replica: int) -> None:
-        self.metrics.offloaded_pages += self.engines[replica].offload_program(pid)
+    def _exec_forward(self, act: Forward, now: float) -> None:
+        if act.source_tier in (Tier.CPU, Tier.SSD):
+            pages = self.engines[act.replica].reload_program(act.pid)
+            if act.source_tier is Tier.SSD:
+                self.metrics.nvme_reloaded_pages += pages
+            else:
+                self.metrics.reloaded_pages += pages
+            self._ack(act.pid, act.action_id, now)
+        elif act.recompute:
+            # Waiting-tier re-admission: drop any pages that survived
+            # engine-side eviction so the full context is re-prefilled —
+            # what the scheduler billed is what the engine now does
+            eng = self.engines[act.replica]
+            eng.discard_program(act.pid, Tier.GPU)
+            eng.discard_program(act.pid, Tier.CPU)
+            self.metrics.recompute_submits += 1
+        self._dispatched[act.pid] = act
 
-    def discard(self, pid: str, replica: int | None, tier: Tier) -> None:
-        if replica is not None:
-            self.engines[replica].discard_program(pid, tier)
-
-    def set_label(self, pid: str, replica: int | None, label: TypeLabel) -> None:
-        if replica is not None:
-            self.engines[replica].set_label(pid, label)
+    def _ack(self, pid: str, action_id: int, now: float) -> None:
+        self.apply_plan(self.sched.on_transfer_complete(pid, action_id, now))
 
     # ------------------------------------------------------------- replay
     def replay(
@@ -125,16 +203,16 @@ class MoriRouter:
                 max_new_tokens=max_new_tokens,
             )
             self._pending[pid] = (req, step_idx)
-            self.sched.request_arrived(pid, want, now)
+            self.apply_plan(self.sched.request_arrived(pid, want, now))
             if pid not in self._dispatched:
                 self.metrics.gated_events += 1
 
         def finish_step(pid: str, now: float):
             st = state[pid]
             req, step_idx = self._pending.pop(pid)
-            replica = self._dispatched.pop(pid)
-            eng = self.engines[replica]
-            sid = eng.submit(req)
+            act = self._dispatched.pop(pid)
+            eng = self.engines[act.replica]
+            eng.submit(req)
             self.sched.notify_inference_started(pid, now)
             done = eng.run_to_completion()
             comp = next(c for c in done if c.program_id == pid)
@@ -147,12 +225,14 @@ class MoriRouter:
             trace: ProgramTrace = st["trace"]
             rec = trace.steps[step_idx]
             end = now + rec.reasoning_wall_s
-            self.sched.request_completed(pid, len(comp.output_tokens), end)
+            self.apply_plan(
+                self.sched.request_completed(pid, len(comp.output_tokens), end)
+            )
             nxt = step_idx + 1
             if nxt < len(trace.steps) and nxt < st["max_steps"]:
                 push(end + rec.tool_duration_s, lambda t, p=pid, n=nxt: issue(p, n, t))
             else:
-                self.sched.program_finished(pid, end)
+                self.apply_plan(self.sched.program_finished(pid, end))
 
         # register programs
         max_seq = self.engines[0].max_seq
@@ -191,7 +271,7 @@ class MoriRouter:
             t, _, fn = heapq.heappop(q)
             now = max(now, t)
             while next_tick <= now:
-                self.sched.tick(next_tick)
+                self.apply_plan(self.sched.tick(next_tick))
                 drain(next_tick)
                 next_tick += tick
             fn(now)
@@ -201,7 +281,7 @@ class MoriRouter:
             if not self._pending:
                 break
             now += tick
-            self.sched.tick(now)
+            self.apply_plan(self.sched.tick(now))
             drain(now)
         return self.metrics
 

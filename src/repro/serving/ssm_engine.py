@@ -12,21 +12,24 @@ paged KV cache. Two structural consequences, both visible here:
   bundle; the two-tier store is a counted slot pool, not a page pool.
 
 :class:`SsmEngine` exposes the same surface as :class:`repro.serving.
-engine.Engine`, so :class:`MoriRouter` (and the full MORI policy stack)
-drives it unchanged — demonstrated in tests/test_ssm_engine.py.
+engine.Engine` (offload/reload/discard/set_label program verbs), so
+:class:`MoriRouter`'s ``apply_plan`` executor — and with it the full MORI
+plan/ack policy stack — drives it unchanged: bundle moves are the page
+moves of the dense path at N=1 granularity. Demonstrated in
+tests/test_ssm_engine.py.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import Tier, TypeLabel
-from repro.models import Model, count_params
+from repro.models import Model
 from repro.models.config import ModelConfig
-from repro.models.params import abstract, is_leaf
+from repro.models.params import is_leaf
 from repro.serving.engine import Completion, EngineRequest
 
 

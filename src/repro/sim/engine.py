@@ -5,13 +5,18 @@ is a closed-loop client that replays one trace — send a request, wait for the
 response, sleep the recorded tool-call duration, repeat; when a trace ends the
 slot immediately starts the next one. The serving side models each replica
 with a roofline decode-step cost (``repro.sim.hardware``), a FIFO prefill
-queue with chunked-prefill interference, and a full-duplex PCIe transfer
-queue that overlaps compute.
+queue with chunked-prefill interference, and full-duplex PCIe + NVMe transfer
+channels that overlap compute.
 
-The scheduler under test is *real* policy code from ``repro.core`` — the
-simulator implements its :class:`EngineAdapter` and feeds it lifecycle
-events, so MORI and every baseline run the same code here as in the real
-JAX engine.
+The scheduler under test is *real* policy code from ``repro.core``: every
+lifecycle event returns a :class:`~repro.core.actions.PlacementPlan`, the
+simulator executes it through :meth:`Simulation.apply_plan`, and each
+finished transfer is acknowledged back via
+``scheduler.on_transfer_complete`` — the same plan/ack protocol the real
+JAX router speaks, so MORI and every baseline run identical code in both
+worlds. Transfer sizing and channel choice come from the actions themselves
+(``Offload.dst_tier``, ``Forward.source_tier``, ``.nbytes``), not from
+simulator-side bookkeeping.
 """
 from __future__ import annotations
 
@@ -20,10 +25,19 @@ import itertools
 import random
 import time as _time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
-from repro.core.types import ProgramTrace, TransferCost
+from repro.core.actions import (
+    Action,
+    CancelTransfer,
+    Forward,
+    Migrate,
+    Offload,
+    PlacementPlan,
+)
+from repro.core.ledger import Channel, channel_for
+from repro.core.types import ProgramTrace, Tier, TransferCost
 from repro.sim.hardware import HwConfig
 from repro.sim.metrics import SimResult, percentile
 
@@ -44,6 +58,16 @@ class _Request:
     first_token_at: float | None = None
 
 
+@dataclass
+class _Transfer:
+    """One queued KV movement, executing a ledger-tracked action."""
+
+    nbytes: int
+    action_id: int
+    pid: str
+    req: _Request | None = None   # set for reloads: prefill follows the copy
+
+
 class _Replica:
     """Fluid-rate model of one engine replica."""
 
@@ -56,11 +80,11 @@ class _Replica:
         self.prefill_active: _Request | None = None
         self.prefill_remaining = 0.0
         self.prefill_q: deque[_Request] = deque()
-        self.xfer_active: tuple[float, _Request | None] | None = None
-        self.xfer_q: deque[tuple[int, _Request | None]] = deque()
+        self.xfer_active: _Transfer | None = None
+        self.xfer_q: deque[_Transfer] = deque()
         # §7.1 extension: NVMe is its own channel, not the PCIe queue
-        self.ssd_active: tuple[float, _Request | None] | None = None
-        self.ssd_q: deque[tuple[int, _Request | None]] = deque()
+        self.ssd_active: _Transfer | None = None
+        self.ssd_q: deque[_Transfer] = deque()
         self.version = 0
         self.last_settle = 0.0
         self.busy_accum = 0.0
@@ -118,18 +142,6 @@ class _Replica:
         self.decode[req.pid] = req
         self.reschedule(now)
 
-    def drop_program(self, pid: str, now: float) -> None:
-        """Cancel any in-flight work for pid (failure / stale forward)."""
-        self.settle(now)
-        self.decode.pop(pid, None)
-        if self.prefill_active is not None and self.prefill_active.pid == pid:
-            self.prefill_active = None
-            self.start_next_prefill(now)
-        self.prefill_q = deque(r for r in self.prefill_q if r.pid != pid)
-        self.xfer_q = deque(j for j in self.xfer_q if j[1] is None or j[1].pid != pid)
-        self.ssd_q = deque(j for j in self.ssd_q if j[1] is None or j[1].pid != pid)
-        self.reschedule(now)
-
     # -------------------------------------------------------------- prefill
     def enqueue_prefill(self, req: _Request, now: float) -> None:
         self.prefill_q.append(req)
@@ -149,7 +161,6 @@ class _Replica:
             return
         self.prefill_active = req
         dur = req.prefill_tokens / self.hw.prefill_rate
-        v = self.version + 1
         self.reschedule(now)  # decode slows down under interference
         self.sim.at(now + dur, lambda t: self.on_prefill_done(req, t))
 
@@ -167,48 +178,70 @@ class _Replica:
         self.add_decode(req, now)
 
     # ------------------------------------------------------------ transfers
+    # the PCIe channel maps to xfer_q, the NVMe drive to ssd_q; which
+    # channel a given action bills is decided once, by core.ledger.channel_for
     def enqueue_transfer(
-        self, nbytes: int, req: _Request | None, now: float,
-        channel: str = "pcie",
+        self, job: _Transfer, now: float, channel: Channel = Channel.PCIE
     ) -> None:
-        if channel == "ssd":
-            self.ssd_q.append((nbytes, req))
+        if channel is Channel.NVME:
+            self.ssd_q.append(job)
             if self.ssd_active is None:
-                self.start_next_transfer(now, "ssd")
+                self.start_next_transfer(now, channel)
             return
-        self.xfer_q.append((nbytes, req))
+        self.xfer_q.append(job)
         if self.xfer_active is None:
             self.start_next_transfer(now)
 
-    def start_next_transfer(self, now: float, channel: str = "pcie") -> None:
+    def start_next_transfer(self, now: float, channel: Channel = Channel.PCIE) -> None:
         cost = self.sim.xfer_cost
-        if channel == "ssd":
+        if channel is Channel.NVME:
             if self.ssd_active is not None or not self.ssd_q:
                 return
-            nbytes, req = self.ssd_q.popleft()
-            dur = cost.fixed_latency_s + nbytes / cost.ssd_bytes_per_s
-            self.ssd_active = (now + dur, req)
-            self.sim.at(now + dur, lambda t: self.on_transfer_done(req, t, "ssd"))
+            job = self.ssd_q.popleft()
+            dur = cost.fixed_latency_s + job.nbytes / cost.ssd_bytes_per_s
+            self.ssd_active = job
+            self.sim.at(now + dur, lambda t: self.on_transfer_done(job, t, channel))
             return
         if self.xfer_active is not None or not self.xfer_q:
             return
-        nbytes, req = self.xfer_q.popleft()
-        dur = cost.fixed_latency_s + nbytes / cost.pcie_bytes_per_s
-        self.xfer_active = (now + dur, req)
-        self.sim.at(now + dur, lambda t: self.on_transfer_done(req, t))
+        job = self.xfer_q.popleft()
+        dur = cost.fixed_latency_s + job.nbytes / cost.pcie_bytes_per_s
+        self.xfer_active = job
+        self.sim.at(now + dur, lambda t: self.on_transfer_done(job, t))
 
     def on_transfer_done(
-        self, req: _Request | None, now: float, channel: str = "pcie"
+        self, job: _Transfer, now: float, channel: Channel = Channel.PCIE
     ) -> None:
-        if channel == "ssd":
+        if channel is Channel.NVME:
+            if self.ssd_active is not job:
+                return  # stale completion after a failure reset
             self.ssd_active = None
         else:
+            if self.xfer_active is not job:
+                return
             self.xfer_active = None
         if not self.alive:
             return
-        if req is not None:  # reload completed -> proceed to prefill
-            self.enqueue_prefill(req, now)
+        # acknowledge the ledger record; the scheduler may emit follow-ups
+        self.sim.apply_plan(
+            self.sim.sched.on_transfer_complete(job.pid, job.action_id, now)
+        )
+        if job.req is not None:  # reload completed -> proceed to prefill
+            self.enqueue_prefill(job.req, now)
         self.start_next_transfer(now, channel)
+
+    def cancel_transfer(self, target_action_id: int) -> bool:
+        """Drop a still-queued transfer. An already-active transfer is left
+        to finish: offloads copy rather than move, so the late completion
+        is wasted bandwidth, not a correctness problem (the scheduler has
+        already closed the ledger record and ignores the stale ack)."""
+        for q_name in ("xfer_q", "ssd_q"):
+            q = getattr(self, q_name)
+            kept = deque(j for j in q if j.action_id != target_action_id)
+            if len(kept) != len(q):
+                setattr(self, q_name, kept)
+                return True
+        return False
 
     def fail(self, now: float) -> None:
         self.settle(now)
@@ -255,6 +288,8 @@ class Simulation:
         seed: int = 0,
         sched_config: SchedulerConfig | None = None,
         faults: list[FaultPlan] | None = None,
+        reuse_corpus: bool = True,
+        record_plans: bool = False,
     ):
         # a ReplicaSet pins the simulated fleet to a concrete device layout:
         # replica count comes from the placement; the set stays on the
@@ -279,13 +314,18 @@ class Simulation:
             # calibrate the cost-aware SSD guard from the hardware model
             self.sched_config.ssd_bytes_per_s = self.xfer_cost.ssd_bytes_per_s
             self.sched_config.recompute_tok_per_s = hw.prefill_rate
-        self.sched = SCHEDULERS[scheduler](
-            num_replicas, cap, self, self.sched_config
-        )
+        self.sched = SCHEDULERS[scheduler](num_replicas, cap, self.sched_config)
         self.scheduler_name = scheduler
         self.replicas = [_Replica(i, hw, self) for i in range(num_replicas)]
         self.n_slots = num_replicas * concurrency_per_replica
         self.faults = faults or []
+        # reuse_corpus=False runs each trace exactly once under its own
+        # program id — finite-replay mode for golden cross-runtime tests;
+        # freed slots pick up the next unplayed trace until the corpus drains
+        self.reuse_corpus = reuse_corpus
+        self._finite_next = 0
+        self.record_plans = record_plans
+        self.action_log: list[Action] = []
 
         # event queue
         self._q: list[tuple[float, int, object]] = []
@@ -308,64 +348,102 @@ class Simulation:
         self.warm_forwards = 0
         self.reload_forwards = 0
         self.recompute_forwards = 0
+        self.cancelled_transfers = 0
+        self.migrations = 0
         self.tick_overhead_s: list[float] = []
+        self.tick_actions: list[int] = []
         self.finished_programs: list[dict] = []
 
     # ------------------------------------------------------------ EventQ
     def at(self, t: float, fn) -> None:
         heapq.heappush(self._q, (t, next(self._seq), fn))
 
-    # ----------------------------------------------------- EngineAdapter
-    def forward(self, pid: str, replica: int, reload: bool, recompute: bool) -> None:
-        req = self._pending.get(pid)
+    # ------------------------------------------------------- plan executor
+    def apply_plan(self, plan: PlacementPlan) -> None:
+        """Execute a scheduler-emitted plan against the modeled hardware.
+
+        ``Discard`` and ``SetLabel`` are no-ops here: byte accounting lives
+        in the scheduler, and the sim has no block level to restamp.
+        """
+        if self.record_plans and plan.actions:
+            self.action_log.extend(plan.actions)
+        for act in plan:
+            if isinstance(act, Forward):
+                self._exec_forward(act)
+            elif isinstance(act, Offload):
+                self._exec_offload(act)
+            elif isinstance(act, CancelTransfer):
+                self._exec_cancel(act)
+            elif isinstance(act, Migrate):
+                self._exec_migrate(act)
+
+    def _exec_forward(self, act: Forward) -> None:
+        req = self._pending.get(act.pid)
         if req is None:
             return
-        rep = self.replicas[replica]
+        rep = self.replicas[act.replica]
         if not rep.alive:
             return  # scheduler will re-place after replica_failed
-        req.slot_replica = replica  # type: ignore[attr-defined]
-        prior = 0 if recompute else self._last_ctx.get(pid, 0)
+        prior = 0 if act.recompute else self._last_ctx.get(act.pid, 0)
         req.prefill_tokens = max(0, req.input_tokens - prior)
         req.kv_context_tokens = req.input_tokens
         self.forwards += 1
-        if recompute:
+        if act.recompute:
             self.recompute_forwards += 1
             rep.enqueue_prefill(req, self.now)
-        elif reload:
+        elif act.source_tier in (Tier.CPU, Tier.SSD):
             self.reload_forwards += 1
-            req.reload_bytes = prior * self.hw.kv_bytes_per_token
-            prog = self.sched.programs.get(pid)
-            channel = "pcie"
-            if prog is not None and prog.reload_src is not None:
-                # SSD-sourced reload (§7.1 extension): its own NVMe channel
-                channel = "ssd"
-                prog.reload_src = None
-            rep.enqueue_transfer(req.reload_bytes, req, self.now, channel)
+            req.reload_bytes = act.nbytes
+            # SSD-sourced reloads (§7.1 extension) bill the NVMe channel
+            rep.enqueue_transfer(
+                _Transfer(act.nbytes, act.action_id, act.pid, req),
+                self.now, channel_for(act.source_tier),
+            )
         else:
             self.warm_forwards += 1
             rep.enqueue_prefill(req, self.now)
 
-    def offload(self, pid: str, replica: int) -> None:
-        prog = self.sched.programs.get(pid)
-        nbytes = prog.kv_bytes if prog else 0
-        rep = self.replicas[replica]
-        if rep.alive and nbytes > 0:
-            rep.enqueue_transfer(nbytes, None, self.now)
+    def _exec_offload(self, act: Offload) -> None:
+        rep = self.replicas[act.replica]
+        if not rep.alive or act.nbytes <= 0:
+            return
+        # writes are staged through host DRAM: the contended channel is the
+        # one the bytes are read from; NVMe stays reserved for reloads
+        rep.enqueue_transfer(
+            _Transfer(act.nbytes, act.action_id, act.pid),
+            self.now, channel_for(act.src_tier),
+        )
 
-    def discard(self, pid: str, replica: int | None, tier) -> None:
-        pass  # byte accounting lives in the scheduler; nothing to move
+    def _exec_cancel(self, act: CancelTransfer) -> None:
+        if self.replicas[act.replica].cancel_transfer(act.target_action_id):
+            self.cancelled_transfers += 1
 
-    def set_label(self, pid: str, replica: int | None, label) -> None:
-        pass  # the real engine restamps radix nodes; sim has no block level
+    def _exec_migrate(self, act: Migrate) -> None:
+        """Cross-replica DRAM move: modeled as one transfer on the
+        destination replica's PCIe/ingest channel."""
+        rep = self.replicas[act.dst_replica]
+        if not rep.alive or act.nbytes <= 0:
+            return
+        self.migrations += 1
+        rep.enqueue_transfer(
+            _Transfer(act.nbytes, act.action_id, act.pid), self.now, Channel.PCIE
+        )
 
     # ------------------------------------------------------------ clients
     def _start_trace(self, slot: int, now: float) -> None:
-        idx = self._slot_trace.setdefault(slot, slot % len(self.corpus))
-        gen = self._slot_gen.get(slot, 0)
-        trace = self.corpus[idx % len(self.corpus)]
-        pid = f"s{slot}g{gen}-{trace.program_id}"
-        self._slot_trace[slot] = idx + self.n_slots  # stride through corpus
-        self._slot_gen[slot] = gen + 1
+        if not self.reuse_corpus:
+            if self._finite_next >= len(self.corpus):
+                return  # corpus drained: every trace ran exactly once
+            trace = self.corpus[self._finite_next]
+            self._finite_next += 1
+            pid = trace.program_id
+        else:
+            idx = self._slot_trace.setdefault(slot, slot % len(self.corpus))
+            gen = self._slot_gen.get(slot, 0)
+            trace = self.corpus[idx % len(self.corpus)]
+            pid = f"s{slot}g{gen}-{trace.program_id}"
+            self._slot_trace[slot] = idx + self.n_slots  # stride through corpus
+            self._slot_gen[slot] = gen + 1
         self.sched.program_arrived(pid, self.hw.kv_bytes_per_token, now)
         self._issue(pid, trace, 0, slot, now)
 
@@ -384,7 +462,7 @@ class Simulation:
         )
         req.trace = trace  # type: ignore[attr-defined]
         self._pending[pid] = req
-        self.sched.request_arrived(pid, rec.input_tokens, now)
+        self.apply_plan(self.sched.request_arrived(pid, rec.input_tokens, now))
 
     def complete_request(self, req: _Request, now: float) -> None:
         self._pending.pop(req.pid, None)
@@ -394,7 +472,7 @@ class Simulation:
         if now >= self.warmup:
             self.completed_tokens_measured += req.output_tokens
             self.completed_steps_measured += 1
-        self.sched.request_completed(req.pid, req.output_tokens, now)
+        self.apply_plan(self.sched.request_completed(req.pid, req.output_tokens, now))
         trace: ProgramTrace = req.trace  # type: ignore[attr-defined]
         nxt = req.step_idx + 1
         if nxt < len(trace.steps):
@@ -415,7 +493,7 @@ class Simulation:
                         "gated_s": prog.metrics.gated_time_s,
                     }
                 )
-            self.sched.program_finished(req.pid, now)
+            self.apply_plan(self.sched.program_finished(req.pid, now))
             self._last_ctx.pop(req.pid, None)
             if now < self.duration:
                 self.at(now + 1.0, lambda t, s=req.slot: self._start_trace(s, t))
@@ -432,8 +510,10 @@ class Simulation:
 
         def tick(t: float) -> None:
             w0 = _time.perf_counter()
-            self.sched.tick(t)
+            plan = self.sched.tick(t)
             self.tick_overhead_s.append(_time.perf_counter() - w0)
+            self.tick_actions.append(len(plan))
+            self.apply_plan(plan)
             if t + self.sched_config.tick_interval_s <= self.duration:
                 self.at(t + self.sched_config.tick_interval_s, tick)
 
@@ -456,7 +536,7 @@ class Simulation:
 
     def _fail(self, rid: int, now: float) -> None:
         self.replicas[rid].fail(now)
-        self.sched.replica_failed(rid, now)
+        self.apply_plan(self.sched.replica_failed(rid, now))
 
     def _recover(self, rid: int, now: float) -> None:
         self.replicas[rid].recover(now)

@@ -22,7 +22,7 @@ Fault-tolerance model (the 1000-node story, exercised in tests):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

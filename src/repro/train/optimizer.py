@@ -2,8 +2,6 @@
 giant MoEs (arctic-480b) so optimizer state fits v5e HBM budgets."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

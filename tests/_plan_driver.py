@@ -1,0 +1,53 @@
+"""Test harness for the PlacementPlan protocol.
+
+:class:`Driver` wraps a scheduler and transparently collects every action
+emitted by its plan-returning event methods, so tests can keep calling the
+scheduler's event API directly and then assert on the accumulated action
+stream. Attribute access falls through to the wrapped scheduler, which
+keeps state-inspection code (``s.programs``, ``s.replicas`` ...) unchanged.
+"""
+from __future__ import annotations
+
+from repro.core.actions import Action, PlacementPlan
+
+_PLAN_EVENTS = frozenset(
+    {
+        "request_arrived",
+        "request_completed",
+        "tick",
+        "program_finished",
+        "replica_failed",
+        "on_transfer_complete",
+    }
+)
+
+
+class Driver:
+    def __init__(self, sched):
+        self.sched = sched
+        self.actions: list[Action] = []
+        self.plans: list[PlacementPlan] = []
+
+    def __getattr__(self, name):
+        attr = getattr(self.sched, name)
+        if name not in _PLAN_EVENTS:
+            return attr
+
+        def wrapped(*args, **kwargs):
+            plan = attr(*args, **kwargs)
+            self.plans.append(plan)
+            self.actions.extend(plan.actions)
+            return plan
+
+        return wrapped
+
+    def of_kind(self, kind: type[Action]) -> list[Action]:
+        return [a for a in self.actions if isinstance(a, kind)]
+
+    def ack_all(self, now: float):
+        """Acknowledge every open transfer (in emission order), as a
+        synchronous runtime would, and return the drained plans."""
+        return [
+            self.on_transfer_complete(rec.pid, rec.action_id, now)
+            for rec in sorted(self.sched.ledger.in_flight(), key=lambda r: r.action_id)
+        ]

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import Model, abstract, count_params, materialize
+from repro.models import Model, count_params, materialize
 
 ARCHS = list(ARCH_IDS)
 

@@ -1,6 +1,5 @@
-"""Unit + property tests for MORI's three-tier scheduler (paper §4.3)."""
-from dataclasses import dataclass, field
-
+"""Unit + property tests for MORI's three-tier scheduler (paper §4.3),
+driven through the PlacementPlan protocol."""
 import pytest
 try:
     from hypothesis import given, settings
@@ -8,8 +7,12 @@ try:
 except ImportError:  # image without hypothesis: deterministic shim
     from _hypothesis_compat import given, settings, st
 
+from _plan_driver import Driver
 from repro.core import (
+    Discard,
+    Forward,
     MoriScheduler,
+    Offload,
     SCHEDULERS,
     SchedulerConfig,
     Status,
@@ -19,32 +22,11 @@ from repro.core import (
 )
 
 
-@dataclass
-class RecordingAdapter:
-    events: list = field(default_factory=list)
-
-    def forward(self, pid, replica, reload, recompute):
-        self.events.append(("forward", pid, replica, reload, recompute))
-
-    def offload(self, pid, replica):
-        self.events.append(("offload", pid, replica))
-
-    def discard(self, pid, replica, tier):
-        self.events.append(("discard", pid, replica, tier))
-
-    def set_label(self, pid, replica, label):
-        self.events.append(("label", pid, replica, label))
-
-    def of_kind(self, kind):
-        return [e for e in self.events if e[0] == kind]
-
-
 def make(gpu=1000, cpu=1000, replicas=1, ssd=0, **cfg):
-    ad = RecordingAdapter()
-    s = MoriScheduler(
-        replicas, TierCapacity(gpu, cpu, ssd), ad, SchedulerConfig(**cfg)
+    d = Driver(
+        MoriScheduler(replicas, TierCapacity(gpu, cpu, ssd), SchedulerConfig(**cfg))
     )
-    return s, ad
+    return d, d
 
 
 def drive_step(s, pid, input_tokens, output_tokens, t_start, reason_s, tool_s):
@@ -61,15 +43,18 @@ class TestPlacementBasics:
         s.program_arrived("a", 1, 0.0)
         s.request_arrived("a", 100, 0.0)
         assert s.programs["a"].tier is Tier.GPU
-        assert ad.of_kind("forward")[0][1:] == ("a", 0, False, True)
+        fwd = ad.of_kind(Forward)[0]
+        assert (fwd.pid, fwd.replica) == ("a", 0)
+        assert fwd.recompute and fwd.source_tier is Tier.WAITING
 
     def test_resident_program_forwarded_without_recompute(self):
         s, ad = make()
         s.program_arrived("a", 1, 0.0)
         t = drive_step(s, "a", 100, 10, 0.0, 1.0, 1.0)
         s.request_arrived("a", 120, t)
-        fwd = ad.of_kind("forward")[-1]
-        assert fwd[1:] == ("a", 0, False, False)
+        fwd = ad.of_kind(Forward)[-1]
+        assert (fwd.pid, fwd.replica) == ("a", 0)
+        assert not fwd.recompute and fwd.source_tier is Tier.GPU
 
     def test_gpu_capacity_respected_on_admission(self):
         s, _ = make(gpu=100)
@@ -80,6 +65,14 @@ class TestPlacementBasics:
         assert s.programs["a"].tier is Tier.GPU
         assert s.programs["b"].tier is Tier.WAITING
         assert s.programs["b"].has_pending
+
+    def test_action_ids_strictly_increase(self):
+        s, ad = make()
+        for i in range(3):
+            s.program_arrived(f"p{i}", 1, 0.0)
+            s.request_arrived(f"p{i}", 20 + i, 0.0)
+        ids = [a.action_id for a in ad.actions]
+        assert ids == sorted(ids) and len(set(ids)) == len(ids)
 
 
 class TestDemotion:
@@ -106,7 +99,12 @@ class TestDemotion:
         s.tick(now)
         assert s.programs["idle"].tier is Tier.CPU  # most idle demoted
         assert s.programs["busy"].tier is Tier.GPU
-        assert ("offload", "idle", 0) in ad.events
+        off = ad.of_kind(Offload)[-1]
+        assert (off.pid, off.replica, off.dst_tier) == ("idle", 0, Tier.CPU)
+        # the offload is ledger-tracked until the runtime acknowledges it
+        assert s.ledger.open_offload("idle") is not None
+        ad.ack_all(now)
+        assert s.ledger.open_offload("idle") is None
 
     def test_demotion_to_waiting_when_cpu_full(self):
         s, ad = make(gpu=200, cpu=0)
@@ -115,7 +113,10 @@ class TestDemotion:
         s.replicas[0].capacity = TierCapacity(50, 0)
         s.tick(10.0)
         assert s.programs["a"].tier is Tier.WAITING
-        assert ("discard", "a", 0, Tier.GPU) in ad.events
+        assert any(
+            d.pid == "a" and d.replica == 0 and d.tier is Tier.GPU
+            for d in ad.of_kind(Discard)
+        )
 
     def test_reasoning_program_demoted_lazily(self):
         s, _ = make(gpu=100, cpu=1000)
@@ -155,13 +156,18 @@ class TestPromotion:
         s.replicas[home].capacity = TierCapacity(0, 1000)
         s.tick(30.0)  # demote to CPU
         assert s.programs["a"].tier is Tier.CPU
+        ad.ack_all(30.0)  # offload transfer lands
         s.replicas[home].capacity = TierCapacity(300, 1000)
         s.request_arrived("a", 130, t)  # tool done -> pending
         s.tick(t + 1.0)
         assert s.programs["a"].tier is Tier.GPU
         assert s.programs["a"].replica == home  # affinity preserved
-        fwd = ad.of_kind("forward")[-1]
-        assert fwd[3] is True and fwd[4] is False  # reload, not recompute
+        fwd = ad.of_kind(Forward)[-1]
+        assert fwd.source_tier is Tier.CPU and not fwd.recompute
+        # the reload moves only the KV materialized before the offload, not
+        # the new input tokens that arrived while the program sat on CPU
+        assert fwd.nbytes == s.programs["a"].materialized_bytes
+        assert fwd.nbytes < s.programs["a"].kv_bytes
 
     def test_swap_idle_gpu_resident_for_busy_returner(self):
         s, _ = make(gpu=100, cpu=1000)
@@ -225,13 +231,25 @@ class TestMultiReplica:
         assert s.programs["x"].replica != filled
 
     def test_finished_program_frees_capacity_everywhere(self):
-        s, ad = make(gpu=100, cpu=100, replicas=2)
+        s, _ = make(gpu=100, cpu=100, replicas=2)
         s.program_arrived("a", 1, 0.0)
         drive_step(s, "a", 80, 10, 0.0, 1.0, 1.0)
         rep = s.programs["a"].replica
         s.program_finished("a", 5.0)
         assert s.replicas[rep].gpu_used == 0
         assert "a" not in s.programs
+
+    def test_replica_failure_discards_and_requeues(self):
+        s, ad = make(gpu=200, cpu=200, replicas=2)
+        s.program_arrived("a", 1, 0.0)
+        drive_step(s, "a", 80, 10, 0.0, 1.0, 30.0)
+        rep = s.programs["a"].replica
+        plan = s.replica_failed(rep, 5.0)
+        assert any(
+            d.pid == "a" and d.tier is Tier.GPU for d in plan.of_kind(Discard)
+        )
+        assert s.programs["a"].tier is Tier.WAITING
+        assert len(s.ledger.in_flight(replica=rep)) == 0
 
 
 @given(
@@ -341,7 +359,7 @@ def test_property_invariants_with_ssd_tier(seed, n_programs, gpu, cpu, ssd):
 
 @pytest.mark.parametrize("name", list(SCHEDULERS))
 def test_all_schedulers_run_a_small_workload(name):
-    s = SCHEDULERS[name](2, TierCapacity(500, 500), RecordingAdapter())
+    s = Driver(SCHEDULERS[name](2, TierCapacity(500, 500)))
     t = 0.0
     for i in range(3):
         s.program_arrived(f"p{i}", 1, t)
@@ -357,6 +375,7 @@ def test_all_schedulers_run_a_small_workload(name):
                 s.request_completed(pid, 10, t + 1.0)
             t += 0.5
         s.tick(t)
+        s.ack_all(t)
     for i in range(3):
         if f"p{i}" in s.programs:
             s.program_finished(f"p{i}", t)

@@ -8,13 +8,11 @@ the per-program byte accounting differs.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs import get_config
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
 from repro.core.types import Tier
-from repro.models import Model, count_params
-from repro.models.params import Leaf, is_leaf
+from repro.models import Model
+from repro.models.params import is_leaf
 
 
 def _state_bytes(cfg, seq_len: int) -> int:
@@ -54,17 +52,10 @@ def test_ssm_state_tiny_vs_dense_kv():
     assert dense / ssm > 50
 
 
-class _NullEngine:
-    def forward(self, *a, **k): ...
-    def offload(self, *a, **k): ...
-    def discard(self, *a, **k): ...
-    def set_label(self, *a, **k): ...
-
-
 def _drive(kv_bytes_per_token, n_programs, gpu_bytes):
     """Admit n programs with 8k contexts; return how many were demoted."""
     sched = SCHEDULERS["mori"](
-        1, TierCapacity(gpu_bytes, gpu_bytes), _NullEngine(),
+        1, TierCapacity(gpu_bytes, gpu_bytes),
         SchedulerConfig(tick_interval_s=1.0),
     )
     for i in range(n_programs):

@@ -1,0 +1,192 @@
+"""Cross-runtime plan-protocol tests (acceptance gates of the IR redesign).
+
+* The simulator and the real JAX router replay the *same* 3-program trace
+  and must emit **byte-identical** serialized action streams — the proof
+  that both runtimes drive one policy through one protocol.
+* The real router bills SSD-tier reloads to the NVMe counter (regression:
+  the old ``reload_src`` side-channel was silently dropped on the real
+  path and every reload was accounted as PCIe).
+* A Waiting-tier re-admission (``Forward(recompute=True)``) genuinely
+  re-prefills in the real engine (regression: the flag used to be ignored).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import SchedulerConfig, Tier
+from repro.core.actions import Forward, action_to_json
+from repro.core.types import ProgramTrace, RequestRecord
+from repro.sim import Simulation, small_test_hw
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import Model, materialize
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+    return cfg, params
+
+
+def _golden_traces() -> list[ProgramTrace]:
+    """Three 2-step programs with widely separated tool windows so the
+    event order is identical under both clocks (sim-modeled inference
+    finishes in milliseconds; the virtual router clock uses the recorded
+    1 s reasoning wall — both far below the 30 s tool spacing)."""
+    def tr(pid, ctx, tool):
+        return ProgramTrace(pid, [
+            RequestRecord(ctx, 4, tool, reasoning_wall_s=1.0),
+            RequestRecord(ctx + 12, 4, 0.0, reasoning_wall_s=1.0),
+        ])
+
+    return [tr("p0", 48, 30.0), tr("p1", 56, 60.0), tr("p2", 64, 90.0)]
+
+
+class TestSimRouterEquivalence:
+    def test_byte_identical_action_streams(self, setup):
+        cfg, params = setup
+        from repro.serving import Engine, MoriRouter
+
+        traces = _golden_traces()
+
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                        n_host_pages=64, max_slots=4, max_seq=512)
+        router = MoriRouter([engine], scheduler="mori",
+                            config=SchedulerConfig(), record_plans=True)
+        router.replay(traces, vocab_size=cfg.vocab_size, max_new_tokens=4)
+
+        # same KV geometry as the real engine, capacity far above the
+        # working set: placement decisions depend only on the event stream
+        hw = small_test_hw(
+            kv_bytes_per_token=router.kv_bytes_per_token,
+            hbm_bytes=1_000_000_000,
+        )
+        sim = Simulation(
+            "mori", hw, traces, num_replicas=1, concurrency_per_replica=3,
+            duration_s=200.0, warmup_s=0.0, seed=0,
+            sched_config=SchedulerConfig(),
+            reuse_corpus=False, record_plans=True,
+        )
+        sim.run()
+
+        sim_stream = [action_to_json(a) for a in sim.action_log]
+        router_stream = [action_to_json(a) for a in router.action_log]
+        assert sim_stream == router_stream
+        # and the stream is non-trivial: every program was admitted
+        # (recompute), resumed warm, and torn down
+        fwd = [a for a in sim.action_log if isinstance(a, Forward)]
+        assert sorted(a.pid for a in fwd if a.recompute) == ["p0", "p1", "p2"]
+        assert sorted(
+            a.pid for a in fwd if a.source_tier is Tier.GPU
+        ) == ["p0", "p1", "p2"]
+
+    def test_sim_finite_replay_runs_each_trace_once(self):
+        traces = _golden_traces()
+        hw = small_test_hw(hbm_bytes=1_000_000_000)
+        sim = Simulation(
+            "mori", hw, traces, num_replicas=1, concurrency_per_replica=3,
+            duration_s=400.0, warmup_s=0.0, seed=0, reuse_corpus=False,
+        )
+        r = sim.run()
+        assert r.programs_finished == 3
+        assert r.steps_completed == 6
+
+    def test_sim_finite_replay_drains_corpus_larger_than_slots(self):
+        """Freed slots pick up the next unplayed trace: a 6-trace corpus on
+        3 slots still runs every trace exactly once."""
+        def tr(pid, ctx):
+            return ProgramTrace(pid, [RequestRecord(ctx, 4, 2.0),
+                                      RequestRecord(ctx + 12, 4, 0.0)])
+
+        traces = [tr(f"q{i}", 40 + 8 * i) for i in range(6)]
+        hw = small_test_hw(hbm_bytes=1_000_000_000)
+        sim = Simulation(
+            "mori", hw, traces, num_replicas=1, concurrency_per_replica=3,
+            duration_s=400.0, warmup_s=0.0, seed=0, reuse_corpus=False,
+        )
+        r = sim.run()
+        assert r.programs_finished == 6
+        assert r.steps_completed == 12
+        assert sorted(p["pid"] for p in sim.finished_programs) == sorted(
+            t.program_id for t in traces
+        )
+
+
+class TestRealRouterAccounting:
+    def test_ssd_reload_billed_to_nvme(self, setup):
+        """With DRAM disabled and an SSD budget, demotions sink to the SSD
+        tier and the returning Forward's source_tier bills the NVMe
+        counter — zero PCIe reloads."""
+        cfg, params = setup
+        from repro.serving import Engine, MoriRouter
+        from repro.traces import TraceGenConfig, generate_corpus
+
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                        n_host_pages=128, max_slots=2, max_seq=320)
+        router = MoriRouter(
+            [engine],
+            scheduler="mori",
+            gpu_capacity_bytes=700_000,
+            cpu_capacity_bytes=0,
+            ssd_capacity_bytes=8_000_000,
+            config=SchedulerConfig(tick_interval_s=2.0),
+            record_plans=True,
+        )
+        tg = TraceGenConfig(
+            min_steps=4, mean_steps=6, max_steps=6,
+            initial_context_mean=900, max_context=2200,
+            long_median_s=30.0, busy_calls_mean=2.0, idle_calls_mean=2.0,
+        )
+        corpus = generate_corpus(5, seed=2, cfg=tg)
+        m = router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=4)
+        assert m.steps_completed >= 15
+        ssd_forwards = [
+            a for a in router.action_log
+            if isinstance(a, Forward) and a.source_tier is Tier.SSD
+        ]
+        assert ssd_forwards, "pressure never produced an SSD-tier reload"
+        assert m.nvme_reloaded_pages > 0
+        assert m.reloaded_pages == 0  # no CPU tier configured -> no PCIe bill
+        # synchronous real path: every transfer was acknowledged immediately
+        assert len(router.sched.ledger) == 0
+
+    def test_recompute_readmission_reprefills(self, setup):
+        """A ``Forward(recompute=True)`` must drop any surviving pages so
+        the engine genuinely re-prefills — it may not silently serve the
+        'recomputed' request from stale cache (the old protocol ignored the
+        flag entirely)."""
+        cfg, params = setup
+        from repro.core.actions import PlacementPlan
+        from repro.serving import Engine, EngineRequest, MoriRouter
+
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                        n_host_pages=64, max_slots=2, max_seq=256)
+        router = MoriRouter([engine], scheduler="mori", record_plans=True)
+        # prime the radix cache with a completed step for "p"
+        ctx = list(range(2, 50))
+        engine.submit(EngineRequest("p", ctx, max_new_tokens=4))
+        out = engine.run_to_completion()[0].output_tokens
+        assert engine.tree.program_nodes("p"), "cache priming failed"
+
+        # a warm Forward keeps the pages: the continuation cache-hits
+        router.apply_plan(PlacementPlan(0.0, (
+            Forward(1, "p", 0, Tier.GPU, False, 0),
+        )))
+        ctx2 = ctx + out[:-1] + [60, 61]
+        engine.submit(EngineRequest("p", ctx2, max_new_tokens=4))
+        warm = engine.run_to_completion()[0]
+        assert warm.cached_tokens > 0
+
+        # a recompute Forward drops them: the next submit fully re-prefills
+        router.apply_plan(PlacementPlan(1.0, (
+            Forward(2, "p", 0, Tier.WAITING, True, 0),
+        )))
+        assert router.metrics.recompute_submits == 1
+        assert engine.tree.program_nodes("p") == []
+        ctx3 = ctx2 + warm.output_tokens[:-1] + [70, 71]
+        engine.submit(EngineRequest("p", ctx3, max_new_tokens=4))
+        cold = engine.run_to_completion()[0]
+        assert cold.cached_tokens == 0
+        assert cold.prefilled_tokens == len(ctx3)

@@ -1,7 +1,6 @@
 """Real-engine tests: paged KV + radix reuse correctness, typed eviction
 under pressure, MORI router integration (deliverable b/c)."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -173,7 +173,7 @@ class TestFaultTolerance:
             )
             sim.sched.replicas[0].ewma_step_latency_s = 1.0  # replica 0 slow
             sim.sched.replicas[1].ewma_step_latency_s = 0.1
-            r = sim.run()
+            sim.run()
             placements[penalty] = sim.replicas[0].busy_accum / max(
                 1e-9, sim.replicas[1].busy_accum
             )

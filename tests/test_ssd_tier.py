@@ -4,34 +4,18 @@ from __future__ import annotations
 
 import pytest
 
-from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
+from _plan_driver import Driver
+from repro.core import Forward, SCHEDULERS, SchedulerConfig, TierCapacity
 from repro.core.types import Tier
 from repro.sim import CONFIGS, Simulation
 from repro.traces import generate_corpus
 
 
-class _Log:
-    def __init__(self):
-        self.events = []
-
-    def forward(self, pid, replica, reload, recompute):
-        self.events.append(("forward", pid, reload, recompute))
-
-    def offload(self, pid, replica):
-        self.events.append(("offload", pid))
-
-    def discard(self, pid, replica, tier):
-        self.events.append(("discard", pid, tier))
-
-    def set_label(self, pid, replica, label):
-        pass
-
-
-def _sched(gpu, cpu, ssd, adapter=None):
-    return SCHEDULERS["mori"](
-        1, TierCapacity(gpu, cpu, ssd), adapter or _Log(),
+def _sched(gpu, cpu, ssd):
+    return Driver(SCHEDULERS["mori"](
+        1, TierCapacity(gpu, cpu, ssd),
         SchedulerConfig(tick_interval_s=1.0),
-    )
+    ))
 
 
 def _step(sched, pid, *, tokens, out, at):
@@ -75,23 +59,25 @@ def test_ssd_disabled_is_paper_behavior():
 
 
 def test_ssd_promotion_reloads_and_bills_nvme():
-    log = _Log()
-    sched = _sched(100, 0, 200, log)
+    sched = _sched(100, 0, 200)
     sched.program_arrived("p0", 1, 0.0)
     _step(sched, "p0", tokens=50, out=0, at=0.0)
     sched.program_arrived("p1", 1, 2.0)
     _step(sched, "p1", tokens=50, out=0, at=2.0)
     _step(sched, "p1", tokens=50, out=100, at=4.0)    # p1 -> 150 bytes
     sched.tick(10.0)
+    sched.ack_all(10.0)
     p0, p1 = sched.programs["p0"], sched.programs["p1"]
     assert p0.tier is Tier.SSD or p1.tier is Tier.SSD
-    # p0 returns from its tool call -> promoted out of SSD with reload=True
+    # p0 returns from its tool call -> promoted out of SSD; the Forward's
+    # source_tier bills the reload to the NVMe channel, not PCIe
     if p0.tier is Tier.SSD:
         sched.request_arrived("p0", input_tokens=50, now=20.0)
         sched.tick(21.0)
         assert p0.tier is Tier.GPU
-        fwd = [e for e in log.events if e[0] == "forward" and e[1] == "p0"]
-        assert fwd[-1][2] is True and fwd[-1][3] is False
+        fwd = [a for a in sched.of_kind(Forward) if a.pid == "p0"]
+        assert fwd[-1].source_tier is Tier.SSD and not fwd[-1].recompute
+        assert fwd[-1].nbytes == p0.materialized_bytes > 0
 
 
 def test_tier_invariants_under_cascade():

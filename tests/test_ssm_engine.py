@@ -2,12 +2,11 @@
 state reuse, bundle offload/reload, typed eviction, router integration."""
 from __future__ import annotations
 
-import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.core.scheduler import SchedulerConfig
-from repro.core.types import Tier, TypeLabel
+from repro.core.types import TypeLabel
 from repro.models import Model, materialize
 from repro.serving import MoriRouter
 from repro.serving.engine import EngineRequest

@@ -12,10 +12,13 @@ ART = Path(__file__).resolve().parents[1] / "artifacts"
 ART.mkdir(exist_ok=True)
 
 #: paper-fidelity knobs: QUICK keeps `python -m benchmarks.run` minutes-scale;
-#: FULL reproduces the paper's one-hour runs (set BENCH_FULL=1).
+#: FULL reproduces the paper's one-hour runs (set BENCH_FULL=1). CI's smoke
+#: step shrinks further via BENCH_DURATION_S / BENCH_WARMUP_S overrides.
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
-DURATION_S = 3600.0 if FULL else 900.0
-WARMUP_S = 300.0 if FULL else 120.0
+DURATION_S = float(
+    os.environ.get("BENCH_DURATION_S", 3600.0 if FULL else 900.0)
+)
+WARMUP_S = float(os.environ.get("BENCH_WARMUP_S", 300.0 if FULL else 120.0))
 CORPUS_N = 186
 
 SCHEDS = ["mori", "ta+o", "ta", "smg"]
@@ -55,8 +58,8 @@ def emit(rows: list[dict], name: str) -> None:
     """Print rows as CSV and persist them as JSON."""
     if not rows:
         return
-    keys = list(rows[0].keys())
+    keys = list(dict.fromkeys(k for r in rows for k in r))
     print(",".join(keys))
     for r in rows:
-        print(",".join(str(r[k]) for k in keys))
+        print(",".join(str(r.get(k, "")) for k in keys))
     save_json(name, rows)

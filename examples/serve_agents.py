@@ -60,7 +60,8 @@ def main() -> None:
     print(f"{args.programs} programs x {args.replicas} replicas, "
           f"schedulers: {', '.join(SCHEDS)}\n")
     header = (f"{'sched':<6} {'steps':>6} {'tokens':>7} {'hit%':>6} "
-              f"{'offl':>6} {'reload':>7} {'gated':>6} {'wall_s':>7}")
+              f"{'offl':>6} {'reload':>7} {'gated':>6} {'ovlp':>5} "
+              f"{'cancl':>6} {'wall_s':>7}")
     print(header)
     print("-" * len(header))
     for sched in SCHEDS:
@@ -71,6 +72,7 @@ def main() -> None:
             f"{sched:<6} {m.steps_completed:>6} {m.tokens_generated:>7} "
             f"{m.cache_hit_rate:>6.1%} {m.offloaded_pages:>6} "
             f"{m.reloaded_pages:>7} {m.gated_events:>6} "
+            f"{m.overlap_decode_steps:>5} {m.cancelled_offloads:>6} "
             f"{time.time() - t0:>7.1f}"
         )
     print("\nhigher hit% / fewer gated events = better placement; the paper's"

@@ -26,6 +26,7 @@ from repro.core.program import ProgramState
 from repro.core.radix_tree import TypedRadixTree
 from repro.core.scheduler import AgentScheduler, MoriScheduler
 from repro.core.tiers import ReplicaTiers, WaitingQueue
+from repro.core.transfers import CopyJob, TransferChannels
 from repro.core.types import (
     ProgramTrace,
     RequestRecord,
@@ -48,6 +49,7 @@ __all__ = [
     "AgentScheduler",
     "CancelTransfer",
     "Channel",
+    "CopyJob",
     "Discard",
     "Forward",
     "IdlenessTracker",
@@ -68,6 +70,7 @@ __all__ = [
     "TAScheduler",
     "Tier",
     "TierCapacity",
+    "TransferChannels",
     "TransferLedger",
     "TransferRecord",
     "TypeLabel",

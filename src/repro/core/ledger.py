@@ -119,17 +119,33 @@ class TransferLedger:
         ]
 
     def in_flight_bytes(
-        self, replica: int | None = None, channel: Channel | None = None
+        self,
+        replica: int | None = None,
+        channel: Channel | None = None,
+        kind: str | None = None,
     ) -> int:
-        return sum(r.nbytes for r in self.in_flight(replica, channel))
+        """Bytes the scheduler has asked to move but not heard back about —
+        per replica / channel / kind, the backlog gauge the serving
+        transfer plane exports (``RouterMetrics.peak_inflight_bytes``)."""
+        return sum(r.nbytes for r in self.in_flight(replica, channel, kind))
+
+    def open_for(self, pid: str, kind: str) -> TransferRecord | None:
+        """The still-pending transfer of ``kind`` for ``pid``, if any."""
+        for r in self._open.values():
+            if r.pid == pid and r.kind == kind:
+                return r
+        return None
 
     def open_offload(self, pid: str) -> TransferRecord | None:
         """The still-pending offload of ``pid``'s KV, if any — the handle
         the early-return cancel path needs."""
-        for r in self._open.values():
-            if r.pid == pid and r.kind == "offload":
-                return r
-        return None
+        return self.open_for(pid, "offload")
+
+    def open_migrate(self, pid: str) -> TransferRecord | None:
+        """The still-pending cross-replica move of ``pid``'s DRAM copy —
+        while it is open the bytes have not landed on the destination, so
+        promotion (a reload ``Forward`` of the same bytes) must wait."""
+        return self.open_for(pid, "migrate")
 
     def __len__(self) -> int:
         return len(self._open)

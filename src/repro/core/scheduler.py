@@ -136,10 +136,17 @@ class AgentScheduler(abc.ABC):
     def on_transfer_complete(self, pid: str, action_id: int, now: float) -> PlacementPlan:
         """Runtime acknowledgement that a transfer finished. Closes the
         ledger record; unknown ids (cancelled, or dropped with a failed
-        replica) are tolerated."""
+        replica) are tolerated. Policies react to landed bytes through the
+        ``_on_transfer_complete`` hook (e.g. promoting a migrated program
+        only once its DRAM copy physically exists on the destination)."""
         self._now = now
-        self.ledger.complete(action_id)
+        rec = self.ledger.complete(action_id)
+        if rec is not None:
+            self._on_transfer_complete(rec, now)
         return self._drain(now)
+
+    def _on_transfer_complete(self, rec: TransferRecord, now: float) -> None:
+        """Policy hook: the transfer behind ``rec`` has fully landed."""
 
     @abc.abstractmethod
     def _on_request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
@@ -329,6 +336,24 @@ class MoriScheduler(AgentScheduler):
             self._migrate_pass(now)
         self._sync_labels()
 
+    def _on_transfer_complete(self, rec: TransferRecord, now: float) -> None:
+        """A migrate ack means the program's DRAM copy now physically
+        exists on the destination replica — the promotion that was
+        deferred when the ``Migrate`` was emitted can finally open its
+        reload ``Forward`` (billing the PCIe channel once, after the
+        cross-replica move, instead of concurrently with it)."""
+        if rec.kind != "migrate":
+            return
+        prog = self.programs.get(rec.pid)
+        if (
+            prog is not None
+            and not prog.finished
+            and prog.tier is Tier.CPU
+            and prog.has_pending
+            and not prog.dispatched
+        ):
+            self._try_promote_cpu(prog, now)
+
     # ------------------------------------------------------ cancel on return
     def _cancel_inflight_offload(self, prog: ProgramState) -> bool:
         """Early tool return: the program's offload is still sitting in the
@@ -366,19 +391,25 @@ class MoriScheduler(AgentScheduler):
             rep.gpu.values(),
             key=lambda p: (order[p.status], -p.idleness(now)),
         )
-        pending_free = 0
+        # bytes already promised by victims marked on an *earlier* pass
+        # whose in-flight step has not finished yet: without seeding the
+        # running total with them, a second tick re-counts the same
+        # overflow and demotes extra Acting programs that the pending lazy
+        # demotions would already have freed
+        pending_free = sum(p.kv_bytes for p in rep.gpu.values() if p.lazy_demote)
         for victim in victims:
             if rep.gpu_used - pending_free <= rep.capacity.gpu_kv_bytes:
                 break
+            if victim.lazy_demote:
+                continue  # already counted in the seed above
             if victim.status is Status.REASONING or victim.dispatched:
                 # lazy demotion: finish the in-flight step first. A
                 # dispatched-but-not-started program is in the same boat —
                 # its reload/recompute Forward is already executing, so
                 # demoting it now would move KV out from under the runtime
                 # and double-bill the transfer channel.
-                if not victim.lazy_demote:
-                    victim.lazy_demote = True
-                    pending_free += victim.kv_bytes
+                victim.lazy_demote = True
+                pending_free += victim.kv_bytes
             else:
                 self._demote(victim, now)
 
@@ -494,12 +525,23 @@ class MoriScheduler(AgentScheduler):
             arrivals, smallest context first. Lowest idleness first within
             (1) and (2).
         """
-        # --- P1: CPU -> GPU, affinity-preserving
+        # --- P1: CPU -> GPU, affinity-preserving. A program whose DRAM
+        #     copy is still migrating between replicas is skipped: its
+        #     bytes have not landed, so a reload Forward now would ship KV
+        #     that does not exist on the destination yet (the promotion
+        #     fires from the migrate's on_transfer_complete ack instead).
+        #     Migrate records can only exist with migrate_on_pressure on,
+        #     so the default path never pays the ledger scan.
         p1 = [
             p
             for rep in self.replicas
             for p in rep.cpu.values()
-            if p.has_pending and not p.dispatched
+            if p.has_pending
+            and not p.dispatched
+            and (
+                not self.config.migrate_on_pressure
+                or self.ledger.open_migrate(p.program_id) is None
+            )
         ]
         p1.sort(key=lambda p: p.idleness(now))
         for prog in p1:
@@ -661,6 +703,8 @@ class MoriScheduler(AgentScheduler):
                     # its DRAM copy hasn't physically landed yet — migrating
                     # now would ship bytes that are still on the source GPU
                     continue
+                if self.ledger.open_migrate(prog.program_id) is not None:
+                    continue  # one move at a time
                 others = [
                     r for r in self.balancer.healthy()
                     if r.replica_id != rep.replica_id
@@ -674,7 +718,10 @@ class MoriScheduler(AgentScheduler):
                 self._emit_migrate(prog, rep.replica_id, dst.replica_id)
                 dst.cpu_admit(prog)
                 prog.metrics.replica_switches += 1
-                self._try_promote_cpu(prog, now)
+                # promotion is deferred to the migrate's ack
+                # (_on_transfer_complete): opening the reload Forward now
+                # would double-bill the PCIe channel for the same bytes and
+                # forward KV that has not landed on the destination
 
     # ------------------------------------------------------------ dispatch
     def _has_slot(self, replica: int | None) -> bool:

@@ -1,8 +1,10 @@
-"""Real JAX serving plane: paged KV pool, engine, MORI router."""
+"""Real JAX serving plane: paged KV pool, engine, async transfer plane,
+MORI router."""
 from repro.serving.engine import Completion, Engine, EngineRequest
 from repro.serving.kvpool import PagePool
 from repro.serving.router import MoriRouter, RouterMetrics, snapshot_state
 from repro.serving.ssm_engine import SsmEngine
+from repro.serving.transfer_plane import ReplicaTransferPlane
 
 __all__ = [
     "Completion",
@@ -10,6 +12,7 @@ __all__ = [
     "EngineRequest",
     "MoriRouter",
     "PagePool",
+    "ReplicaTransferPlane",
     "RouterMetrics",
     "SsmEngine",
     "snapshot_state",

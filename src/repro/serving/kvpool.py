@@ -41,11 +41,18 @@ class PagePool:
         self.kv_heads = kv_heads
         self.head_dim = head_dim
         self.page_tokens = page_tokens
+        self.dtype = dtype
         shape = (layers, n_device_pages, page_tokens, kv_heads, head_dim)
         self.k = jnp.zeros(shape, dtype)
         self.v = jnp.zeros(shape, dtype)
         hshape = (layers, n_host_pages, page_tokens, kv_heads, head_dim)
-        self.host_k = np.zeros(hshape, np.float32 if dtype == jnp.float32 else np.float16)
+        # host pages hold the *raw bits* of the device dtype (bf16 -> uint16
+        # view): an offload→reload round trip must be bit-exact. The old
+        # float16 staging was lossy — bf16's exponent range overflows fp16
+        # to inf, silently corrupting large-magnitude KV on reload.
+        self._raw_bits = dtype != jnp.float32
+        hdt = np.uint16 if self._raw_bits else np.float32
+        self.host_k = np.zeros(hshape, hdt)
         self.host_v = np.zeros_like(self.host_k)
         self._free_dev = list(range(n_device_pages))
         self._free_host = list(range(n_host_pages))
@@ -93,34 +100,71 @@ class PagePool:
         return k.reshape(L, n * t, KH, HD), v.reshape(L, n * t, KH, HD)
 
     # ----------------------------------------------------------- transfers
-    def offload_page(self, dev_page: int) -> int | None:
-        """Device -> host. Returns host page id (None if host full)."""
+    def _encode_host(self, dev_arr) -> np.ndarray:
+        """Device page -> host representation (bit-preserving)."""
+        a = np.asarray(dev_arr)
+        return a.view(np.uint16) if self._raw_bits else a.astype(np.float32)
+
+    def _decode_host(self, host_arr) -> np.ndarray:
+        """Host representation -> array reinterpretable as the device dtype."""
+        a = np.ascontiguousarray(host_arr)
+        return a.view(np.dtype(self.dtype)) if self._raw_bits else a
+
+    def copy_page_to_host(self, dev_page: int) -> int | None:
+        """Stage one device page into a host page *without* freeing the
+        device copy — the streamed-offload primitive: the source stays
+        valid until the whole transfer commits, which is what makes a
+        mid-stream CancelTransfer a pure rollback of host pages.
+
+        Deliberately does NOT bill ``offload_bytes``: staging is
+        speculative, and a cancelled transfer must leave no round-trip
+        trace in :class:`PoolStats`. The committing caller bills via
+        :meth:`bill_offload` (the atomic verbs below do it themselves)."""
         hp = self.alloc_host()
         if hp is None:
             return None
-        self.host_k[:, hp] = np.asarray(self.k[:, dev_page], np.float32).astype(
-            self.host_k.dtype
-        )
-        self.host_v[:, hp] = np.asarray(self.v[:, dev_page], np.float32).astype(
-            self.host_v.dtype
-        )
-        self.free_device(dev_page)
-        self.offload_bytes += self.page_bytes
+        self.host_k[:, hp] = self._encode_host(self.k[:, dev_page])
+        self.host_v[:, hp] = self._encode_host(self.v[:, dev_page])
         return hp
 
-    def reload_page(self, host_page: int) -> int | None:
-        """Host -> device. Returns device page id (None if device full)."""
+    def copy_page_to_device(self, host_page: int) -> int | None:
+        """Stage one host page into a device page *without* freeing the
+        host copy (streamed-reload primitive, mirror of the above)."""
         dp = self.alloc_device()
         if dp is None:
             return None
         self.k = self.k.at[:, dp].set(
-            jnp.asarray(self.host_k[:, host_page], self.k.dtype)
+            jnp.asarray(self._decode_host(self.host_k[:, host_page]), self.k.dtype)
         )
         self.v = self.v.at[:, dp].set(
-            jnp.asarray(self.host_v[:, host_page], self.v.dtype)
+            jnp.asarray(self._decode_host(self.host_v[:, host_page]), self.v.dtype)
         )
+        return dp
+
+    def bill_offload(self, pages: int = 1) -> None:
+        """Record ``pages`` worth of committed device→host movement."""
+        self.offload_bytes += pages * self.page_bytes
+
+    def bill_reload(self, pages: int = 1) -> None:
+        """Record ``pages`` worth of committed host→device movement."""
+        self.reload_bytes += pages * self.page_bytes
+
+    def offload_page(self, dev_page: int) -> int | None:
+        """Device -> host (atomic copy+free). Returns host page id."""
+        hp = self.copy_page_to_host(dev_page)
+        if hp is None:
+            return None
+        self.free_device(dev_page)
+        self.bill_offload()
+        return hp
+
+    def reload_page(self, host_page: int) -> int | None:
+        """Host -> device (atomic copy+free). Returns device page id."""
+        dp = self.copy_page_to_device(host_page)
+        if dp is None:
+            return None
         self.free_host(host_page)
-        self.reload_bytes += self.page_bytes
+        self.bill_reload()
         return dp
 
     def stats(self) -> PoolStats:

@@ -2,27 +2,44 @@
 
 The router is the real-engine executor of the scheduler's
 :class:`~repro.core.actions.PlacementPlan` protocol: every lifecycle event
-returns a plan, :meth:`MoriRouter.apply_plan` turns its actions into real
-page movements in each engine's two-tier pool, and — because engine
-transfers here are synchronous — each transfer-bearing action is
-acknowledged back to the scheduler immediately via
-``on_transfer_complete``, keeping the :class:`~repro.core.ledger.
-TransferLedger` empty between events. Workload replay runs on a *virtual
-clock* (tool-call sleeps advance time instantly; inference advances it by
-the trace's recorded reasoning wall-time) while the engine compute itself
-is real JAX execution — so policy behaviour is timed faithfully and the
-data plane actually runs.
+returns a plan and :meth:`MoriRouter.apply_plan` turns its actions into
+real page movements in each engine's two-tier pool. Workload replay runs
+on a *virtual clock* (tool-call sleeps advance time instantly; inference
+advances it by the trace's recorded reasoning wall-time) while the engine
+compute itself is real JAX execution — so policy behaviour is timed
+faithfully and the data plane actually runs.
+
+Transfers execute in one of two modes:
+
+* **async (default)** — an ``Offload`` or reloading ``Forward`` becomes a
+  chunked, page-granular copy job on the replica's
+  :class:`~repro.serving.transfer_plane.ReplicaTransferPlane` (PCIe and
+  NVMe channel queues, bandwidths from
+  :class:`~repro.core.types.TransferCost` or a
+  :class:`~repro.sim.hardware.HwConfig`). Copy chunks interleave with
+  engine decode steps on the virtual clock, ``on_transfer_complete`` acks
+  only when the last page lands, and a tool call that returns early finds
+  its offload still pending — the scheduler's ``CancelTransfer`` path
+  aborts the partially-streamed copy and the program re-admits warm
+  (``RouterMetrics.cancelled_offloads``). Decode steps taken while a
+  transfer was in flight are counted in
+  ``RouterMetrics.overlap_decode_steps`` — the paper's idle-window
+  overlap, measured on the real path.
+* **sync (``sync_transfers=True``)** — the pre-async compatibility mode:
+  every transfer-bearing action executes and acks inside ``apply_plan``,
+  keeping the ledger empty between events. This mode reproduces the
+  golden byte-identical sim↔router action streams of
+  ``tests/test_plan_protocol.py``.
 
 Action semantics on the real path:
 
 * ``Forward(source_tier=GPU)`` — warm: submit against the cached pages.
 * ``Forward(source_tier=CPU)`` — reload host pages over PCIe, then submit.
 * ``Forward(source_tier=SSD)`` — reload billed to the NVMe channel
-  (``RouterMetrics.nvme_reloaded_pages``); previously this was silently
-  mis-accounted as PCIe via the mutable ``reload_src`` side-channel.
+  (``RouterMetrics.nvme_reloaded_pages``).
 * ``Forward(recompute=True)`` — Waiting-tier re-admission: the program's
   stale pages (if any survived) are dropped so the engine genuinely
-  re-prefills the full context; previously the flag was ignored.
+  re-prefills the full context.
 * ``Migrate`` — rejected: separate engine processes cannot exchange pages.
 """
 from __future__ import annotations
@@ -42,8 +59,10 @@ from repro.core.actions import (
     PlacementPlan,
     SetLabel,
 )
-from repro.core.types import ProgramTrace, Tier
+from repro.core.transfers import CopyJob
+from repro.core.types import ProgramTrace, Tier, TransferCost
 from repro.serving.engine import Engine, EngineRequest
+from repro.serving.transfer_plane import ReplicaTransferPlane
 
 
 @dataclass
@@ -57,6 +76,11 @@ class RouterMetrics:
     nvme_reloaded_pages: int = 0     # NVMe-billed (SSD-tier) reloads
     recompute_submits: int = 0
     gated_events: int = 0
+    # async transfer plane (zero in sync_transfers mode)
+    overlap_decode_steps: int = 0    # decode steps with a transfer in flight
+    cancelled_offloads: int = 0      # offloads aborted by early tool return
+    cancelled_pages: int = 0         # staged pages rolled back by aborts
+    peak_inflight_bytes: int = 0     # high-water mark of the transfer ledger
 
     @property
     def cache_hit_rate(self) -> float:
@@ -77,6 +101,9 @@ class MoriRouter:
         ssd_capacity_bytes: int = 0,
         config: SchedulerConfig | None = None,
         record_plans: bool = False,
+        sync_transfers: bool = False,
+        xfer_cost: TransferCost | None = None,
+        hw: "object | None" = None,   # repro.sim.hardware.HwConfig
     ):
         self.engines = engines
         cfg0 = engines[0].cfg
@@ -108,25 +135,76 @@ class MoriRouter:
         self.metrics = RouterMetrics()
         self.record_plans = record_plans
         self.action_log: list[Action] = []
+        self.output_log: dict[str, list[int]] = {}
         self._pending: dict[str, tuple[EngineRequest, int]] = {}
         self._dispatched: dict[str, Forward] = {}
 
+        self.sync_transfers = sync_transfers
+        if xfer_cost is None:
+            # channel bandwidths from the hardware model when one is given
+            # (mirrors Simulation.__init__), else the TransferCost defaults
+            xfer_cost = (
+                TransferCost(pcie_bytes_per_s=hw.pcie_bw)
+                if hw is not None
+                else TransferCost()
+            )
+        self.xfer_cost = xfer_cost
+        # set only while replay() runs; without a virtual clock (direct
+        # apply_plan use) transfers fall back to synchronous execution
+        self._push = None
+        self.planes: list[ReplicaTransferPlane] = [
+            ReplicaTransferPlane(
+                i, eng, xfer_cost,
+                wake=self._wake, on_committed=self._plane_committed,
+            )
+            for i, eng in enumerate(engines)
+        ]
+
+    # -------------------------------------------------------------- helpers
+    @property
+    def _async(self) -> bool:
+        """Async execution needs both the knob and a live virtual clock."""
+        return not self.sync_transfers and self._push is not None
+
+    def _wake(self, eta: float) -> None:
+        """A plane scheduled a chunk at ``eta``: make sure the replay loop
+        visits that timestamp even if no trace event falls on it."""
+        if self._push is not None:
+            self._push(eta, lambda t: None)
+
+    def _advance_planes(self, now: float) -> None:
+        for plane in self.planes:
+            plane.advance(now)
+
+    def _planes_busy(self) -> bool:
+        return any(p.in_flight() for p in self.planes)
+
     # ------------------------------------------------------- plan executor
     def apply_plan(self, plan: PlacementPlan) -> None:
-        """Execute a scheduler plan as real page movements, acknowledging
-        each transfer synchronously."""
+        """Execute a scheduler plan as real page movements — queueing
+        transfer-bearing actions on the async planes, or executing and
+        acknowledging them synchronously in ``sync_transfers`` mode."""
         if self.record_plans and plan.actions:
             self.action_log.extend(plan.actions)
         for act in plan:
             if isinstance(act, Forward):
                 self._exec_forward(act, plan.now)
             elif isinstance(act, Offload):
-                self.metrics.offloaded_pages += self.engines[
-                    act.replica
-                ].offload_program(act.pid)
-                self._ack(act.pid, act.action_id, plan.now)
+                self._exec_offload(act, plan.now)
             elif isinstance(act, Discard):
                 if act.replica is not None:
+                    # abort any copy still streaming this program's pages.
+                    # On program teardown the ledger already dropped the
+                    # records; on a live-program eviction (CPU/SSD overflow
+                    # passes) they are still open, and must be closed here —
+                    # a stale open offload would later match
+                    # _cancel_inflight_offload and cancel the wrong transfer
+                    if not self.sync_transfers:
+                        for job, rolled in self.planes[act.replica].abort_pid(
+                            act.pid, plan.now
+                        ):
+                            self.metrics.cancelled_pages += rolled
+                            self.sched.ledger.cancel(job.action_id)
                     # the logical SSD tier is backed by the host pool on the
                     # real path — freeing it frees host pages
                     tier = Tier.CPU if act.tier is Tier.SSD else act.tier
@@ -135,15 +213,23 @@ class MoriRouter:
                 if act.replica is not None:
                     self.engines[act.replica].set_label(act.pid, act.label)
             elif isinstance(act, CancelTransfer):
-                pass  # transfers are synchronous here: never still queued
+                self._exec_cancel(act, plan.now)
             elif isinstance(act, Migrate):
                 raise RuntimeError(
                     "Migrate reached the real router; construct the scheduler "
                     "with migrate_on_pressure=False"
                 )
+        self.metrics.peak_inflight_bytes = max(
+            self.metrics.peak_inflight_bytes, self.sched.ledger.in_flight_bytes()
+        )
 
     def _exec_forward(self, act: Forward, now: float) -> None:
         if act.source_tier in (Tier.CPU, Tier.SSD):
+            if self._async:
+                # queue the reload; the program dispatches only when the
+                # last page lands (_plane_committed)
+                self.planes[act.replica].enqueue(act, now)
+                return
             pages = self.engines[act.replica].reload_program(act.pid)
             if act.source_tier is Tier.SSD:
                 self.metrics.nvme_reloaded_pages += pages
@@ -159,6 +245,40 @@ class MoriRouter:
             eng.discard_program(act.pid, Tier.CPU)
             self.metrics.recompute_submits += 1
         self._dispatched[act.pid] = act
+
+    def _exec_offload(self, act: Offload, now: float) -> None:
+        if self._async and act.nbytes > 0:
+            self.planes[act.replica].enqueue(act, now)
+            return
+        self.metrics.offloaded_pages += self.engines[act.replica].offload_program(
+            act.pid
+        )
+        self._ack(act.pid, act.action_id, now)
+
+    def _exec_cancel(self, act: CancelTransfer, now: float) -> None:
+        if self.sync_transfers:
+            return  # transfers are synchronous: never still queued
+        res = self.planes[act.replica].abort(act.target_action_id, now)
+        if res is not None:
+            job, rolled = res
+            self.metrics.cancelled_offloads += 1
+            self.metrics.cancelled_pages += rolled
+
+    def _plane_committed(
+        self, job: CopyJob, kind: str, pages: int, now: float
+    ) -> None:
+        """Async transfer fully landed: bill it, release any gated forward,
+        and acknowledge the scheduler's ledger record."""
+        if kind == "offload":
+            self.metrics.offloaded_pages += pages
+        else:
+            act: Forward = job.payload.act
+            if act.source_tier is Tier.SSD:
+                self.metrics.nvme_reloaded_pages += pages
+            else:
+                self.metrics.reloaded_pages += pages
+            self._dispatched[act.pid] = act
+        self._ack(job.pid, job.action_id, now)
 
     def _ack(self, pid: str, action_id: int, now: float) -> None:
         self.apply_plan(self.sched.on_transfer_complete(pid, action_id, now))
@@ -182,6 +302,8 @@ class MoriRouter:
 
         def push(t, fn):
             heapq.heappush(q, (t, next(seq), fn))
+
+        self._push = push
 
         def issue(pid: str, step_idx: int, now: float):
             st = state[pid]
@@ -207,6 +329,27 @@ class MoriRouter:
             if pid not in self._dispatched:
                 self.metrics.gated_events += 1
 
+        def run_decode(eng, replica: int, pid: str, req, wall_s: float, now: float):
+            """Run the submitted request to completion. In async mode the
+            decode steps spread over the virtual window [now, now+wall] and
+            the transfer planes advance between steps — a copy chunk lands
+            *during* decode exactly as the paper's overlap requires."""
+            if not self._async:
+                return eng.run_to_completion()
+            n_est = max(1, req.max_new_tokens - 1)
+            dt = wall_s / n_est if wall_s > 0 else 0.0
+            t, done = now, []
+            for _ in range(20_000):
+                busy = self.planes[replica].in_flight()
+                done.extend(eng.step())
+                if busy:
+                    self.metrics.overlap_decode_steps += 1
+                t = min(now + wall_s, t + dt)
+                self._advance_planes(t)
+                if any(c.program_id == pid for c in done):
+                    return done
+            raise RuntimeError("decode did not complete")
+
         def finish_step(pid: str, now: float):
             st = state[pid]
             req, step_idx = self._pending.pop(pid)
@@ -214,17 +357,20 @@ class MoriRouter:
             eng = self.engines[act.replica]
             eng.submit(req)
             self.sched.notify_inference_started(pid, now)
-            done = eng.run_to_completion()
+            trace: ProgramTrace = st["trace"]
+            rec = trace.steps[step_idx]
+            done = run_decode(eng, act.replica, pid, req, rec.reasoning_wall_s, now)
             comp = next(c for c in done if c.program_id == pid)
             self.metrics.steps_completed += 1
             self.metrics.tokens_generated += len(comp.output_tokens)
             self.metrics.cached_tokens += comp.cached_tokens
             self.metrics.prefilled_tokens += comp.prefilled_tokens
+            self.output_log.setdefault(pid, []).extend(comp.output_tokens)
             st["tokens"].extend(comp.output_tokens[:-1])
             st["ctx_len"] = len(st["tokens"])
-            trace: ProgramTrace = st["trace"]
-            rec = trace.steps[step_idx]
             end = now + rec.reasoning_wall_s
+            if self._async:
+                self._advance_planes(end)
             self.apply_plan(
                 self.sched.request_completed(pid, len(comp.output_tokens), end)
             )
@@ -266,23 +412,34 @@ class MoriRouter:
         guard = 0
         while q:
             guard += 1
-            if guard > 100_000:
+            if guard > 200_000:
                 raise RuntimeError("router replay did not terminate")
             t, _, fn = heapq.heappop(q)
             now = max(now, t)
             while next_tick <= now:
+                self._advance_planes(next_tick)
                 self.apply_plan(self.sched.tick(next_tick))
                 drain(next_tick)
                 next_tick += tick
+            self._advance_planes(now)
             fn(now)
             drain(now)
-        # final drain: keep ticking until nothing is pending
-        for _ in range(256):
-            if not self._pending:
+        # final drain: keep ticking until nothing is pending anywhere —
+        # including transfers still streaming on the planes
+        for _ in range(512):
+            if not self._pending and not self._planes_busy():
                 break
             now += tick
+            self._advance_planes(now)
             self.apply_plan(self.sched.tick(now))
             drain(now)
+        else:
+            raise RuntimeError(
+                "router replay did not drain: requests or transfers still "
+                "pending after 512 final ticks (transfer slower than "
+                "512 x tick_interval_s?)"
+            )
+        self._push = None
         return self.metrics
 
 

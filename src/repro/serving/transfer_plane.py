@@ -1,0 +1,300 @@
+"""Per-replica asynchronous transfer executor for the real serving path.
+
+This is what makes the paper's thesis *true on the real engine*: an
+``Offload`` or reloading ``Forward`` no longer executes (and acks)
+synchronously inside ``MoriRouter.apply_plan`` — it becomes a
+:class:`~repro.core.transfers.CopyJob` on the replica's PCIe/NVMe channel
+queues (:class:`~repro.core.transfers.TransferChannels`, the same FIFO
+model the simulator runs), chunked at *page granularity* on the router's
+virtual clock. Pages stream one per chunk tick while the engine keeps
+decoding; ``scheduler.on_transfer_complete`` fires only when the last
+page lands. Until then the scheduler's ledger shows the transfer open —
+so a tool call that returns early finds its offload still pending and the
+scheduler's ``CancelTransfer`` path genuinely aborts a partially-streamed
+copy: staged host pages are rolled back and the program re-admits warm
+off its untouched device pages.
+
+Two streaming strategies cover both real engines:
+
+* :class:`_PagedStream` (dense :class:`~repro.serving.engine.Engine`) —
+  copies one radix page per chunk through the pool's copy-without-free
+  primitives; the *move* commits atomically at job completion (free
+  device pages / flip node pointers), so an abort at chunk *k* only has
+  *k* staged host pages to discard.
+* :class:`_AtomicStream` (:class:`~repro.serving.ssm_engine.SsmEngine`
+  and anything else bundle-granular) — the whole verb executes at job
+  completion; an abort before that moved nothing and rolls back nothing.
+
+Provisioning note: copy-then-commit means both copies of an in-flight
+transfer exist simultaneously and the source pages are pinned against
+engine-level eviction until commit/abort. Size the physical pools with
+headroom above the scheduler's tier budgets for the largest expected
+in-flight transfer (real systems reserve staging buffers the same way);
+a reload that finds the device pool exhausted mid-stream degrades
+gracefully by committing the pages it has staged so far.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable
+
+from repro.core.actions import Forward, Offload
+from repro.core.ledger import channel_for
+from repro.core.transfers import CopyJob, TransferChannels
+from repro.core.types import Tier, TransferCost
+
+
+class _PagedStream:
+    """Page-granular streamed copy against the dense engine's PagePool."""
+
+    def __init__(self, engine, pid: str, kind: str):
+        self.engine = engine
+        self.pid = pid
+        self.kind = kind
+        tree, nodes = engine.tree, engine.tree.program_nodes(pid)
+        if kind == "offload":
+            # leaves first, matching Engine.offload_program; shared-prefix
+            # nodes pinned by another running program are left in place
+            self.nodes = [
+                n for n in reversed(nodes)
+                if n.device_page is not None and n.refcount == 0
+            ]
+        else:
+            self.nodes = [
+                n for n in nodes
+                if n.device_page is None and n.host_page is not None
+            ]
+        self.copied: list[tuple[object, int]] = []
+        self._next = 0
+        # protect the nodes from engine-level eviction while the copy is
+        # in flight (balanced by unpin in commit/abort)
+        tree.pin(pid)
+
+    @property
+    def n_units(self) -> int:
+        return len(self.nodes)
+
+    def copy_unit(self) -> None:
+        """Stage the next page across the wire (source stays valid)."""
+        if self._next >= len(self.nodes):
+            return
+        node = self.nodes[self._next]
+        self._next += 1
+        pool = self.engine.pool
+        if self.kind == "offload":
+            if node.device_page is None:
+                return  # evicted out from under us before the pin landed
+            self.engine._ensure_host_page()
+            hp = pool.copy_page_to_host(node.device_page)
+            if hp is not None:
+                self.copied.append((node, hp))
+        else:
+            if node.host_page is None:
+                return
+            try:
+                self.engine._ensure_device_page()
+            except RuntimeError:
+                # device pool exhausted with nothing evictable (everything
+                # pinned): stop staging — the commit lands what was copied
+                # and Engine.submit's _reload_prefix retries the rest once
+                # decode slots release their pins
+                return
+            dp = pool.copy_page_to_device(node.host_page)
+            if dp is not None:
+                self.copied.append((node, dp))
+
+    def commit(self) -> int:
+        """All pages landed: atomically retire the source copies."""
+        pool = self.engine.pool
+        n = 0
+        for node, page in self.copied:
+            if self.kind == "offload":
+                if node.refcount > 1:
+                    # another program pinned this shared-prefix page while
+                    # the copy streamed (our own pin accounts for 1):
+                    # retiring the device page now would yank warm KV out
+                    # from under an active decode — keep it, drop the
+                    # staged host copy (mirrors offload_program skipping
+                    # pinned nodes)
+                    pool.free_host(page)
+                    continue
+                if node.device_page is not None:
+                    pool.free_device(node.device_page)
+                    node.device_page = None
+                if node.host_page is None:
+                    node.host_page = page
+                    pool.bill_offload()
+                    n += 1
+                else:           # engine spilled it itself mid-stream
+                    pool.free_host(page)
+            else:
+                if node.host_page is not None:
+                    pool.free_host(node.host_page)
+                    node.host_page = None
+                if node.device_page is None:
+                    node.device_page = page
+                    pool.bill_reload()
+                    n += 1
+                else:
+                    pool.free_device(page)
+        self.engine.tree.unpin(self.pid)
+        return n
+
+    def abort(self) -> int:
+        """Mid-stream cancel: discard the staged partial page set. The
+        source pages were never freed, so the program's KV is intact
+        exactly where it was."""
+        pool = self.engine.pool
+        for _node, page in self.copied:
+            if self.kind == "offload":
+                pool.free_host(page)
+            else:
+                pool.free_device(page)
+        self.engine.tree.unpin(self.pid)
+        return len(self.copied)
+
+
+class _AtomicStream:
+    """Whole-bundle move at commit time (SSM engine & friends)."""
+
+    def __init__(self, engine, pid: str, kind: str):
+        self.engine = engine
+        self.pid = pid
+        self.kind = kind
+
+    @property
+    def n_units(self) -> int:
+        return 1
+
+    def copy_unit(self) -> None:
+        pass
+
+    def commit(self) -> int:
+        if self.kind == "offload":
+            return self.engine.offload_program(self.pid)
+        return self.engine.reload_program(self.pid)
+
+    def abort(self) -> int:
+        return 0  # nothing moved before commit
+
+
+class _PlaneTask:
+    """Runtime payload riding on a CopyJob."""
+
+    __slots__ = ("kind", "act", "stream")
+
+    def __init__(self, kind: str, act):
+        self.kind = kind
+        self.act = act
+        self.stream: _PagedStream | _AtomicStream | None = None
+
+
+class ReplicaTransferPlane:
+    """Chunked async executor of one replica's Offload / reload jobs.
+
+    Completions run on the router's virtual clock: ``schedule`` targets an
+    internal eta-ordered heap, :meth:`advance` drains everything due, and
+    the ``wake`` hook tells the router's replay loop to revisit that
+    timestamp so no completion is stranded between trace events.
+    """
+
+    def __init__(
+        self,
+        replica_id: int,
+        engine,
+        cost: TransferCost,
+        *,
+        wake: Callable[[float], None],
+        on_committed: Callable[[CopyJob, str, int, float], None],
+    ):
+        self.replica_id = replica_id
+        self.engine = engine
+        self.wake = wake
+        self.on_committed = on_committed
+        self._heap: list[tuple[float, int, Callable[[float], None]]] = []
+        self._seq = itertools.count()
+        self.channels = TransferChannels(
+            cost=cost,
+            schedule=self._schedule,
+            on_start=self._job_start,
+            on_chunk=self._job_chunk,
+            on_done=self._job_done,
+        )
+
+    # ---------------------------------------------------------- virtual clock
+    def _schedule(self, eta: float, fn: Callable[[float], None]) -> None:
+        heapq.heappush(self._heap, (eta, next(self._seq), fn))
+        self.wake(eta)
+
+    def advance(self, now: float) -> None:
+        """Run every due chunk/completion, in eta order, stamping each with
+        its own eta (not ``now``) so ledger acks carry faithful times."""
+        while self._heap and self._heap[0][0] <= now:
+            eta, _, fn = heapq.heappop(self._heap)
+            fn(eta)
+
+    # ------------------------------------------------------------ admission
+    def enqueue(self, act, now: float) -> None:
+        if isinstance(act, Offload):
+            task = _PlaneTask("offload", act)
+            channel = channel_for(act.src_tier)
+        else:
+            assert isinstance(act, Forward) and act.source_tier in (Tier.CPU, Tier.SSD)
+            task = _PlaneTask("reload", act)
+            channel = channel_for(act.source_tier)
+        job = CopyJob(
+            act.nbytes, act.action_id, act.pid, self.replica_id,
+            channel, payload=task,
+        )
+        self.channels.enqueue(job, now)
+
+    # ------------------------------------------------------- job lifecycle
+    def _job_start(self, job: CopyJob, now: float) -> None:
+        """Bind the page set when the job reaches the channel head — not at
+        enqueue: a reload queued behind the same program's offload must see
+        the host pages that offload's commit is about to produce."""
+        task: _PlaneTask = job.payload
+        if hasattr(self.engine, "tree") and hasattr(
+            getattr(self.engine, "pool", None), "copy_page_to_host"
+        ):
+            task.stream = _PagedStream(self.engine, job.pid, task.kind)
+        else:
+            task.stream = _AtomicStream(self.engine, job.pid, task.kind)
+        job.n_chunks = max(1, task.stream.n_units)
+
+    def _job_chunk(self, job: CopyJob, now: float) -> None:
+        task: _PlaneTask = job.payload
+        task.stream.copy_unit()
+
+    def _job_done(self, job: CopyJob, now: float) -> None:
+        task: _PlaneTask = job.payload
+        pages = task.stream.commit()
+        self.on_committed(job, task.kind, pages, now)
+
+    # ---------------------------------------------------------- cancellation
+    def abort(self, action_id: int, now: float) -> tuple[CopyJob, int] | None:
+        """Cancel a queued job or abort an in-stream one; returns the job
+        and the number of staged pages rolled back."""
+        job = self.channels.abort(action_id, now)
+        if job is None:
+            return None
+        task: _PlaneTask = job.payload
+        rolled = task.stream.abort() if task.stream is not None else 0
+        return job, rolled
+
+    def abort_pid(self, pid: str, now: float) -> list[tuple[CopyJob, int]]:
+        out = []
+        for job in list(self.channels.jobs()):
+            if job.pid == pid:
+                res = self.abort(job.action_id, now)
+                if res is not None:
+                    out.append(res)
+        return out
+
+    # -------------------------------------------------------------- queries
+    def in_flight(self) -> bool:
+        return self.channels.in_flight()
+
+    def pending_bytes(self) -> int:
+        return self.channels.pending_bytes()

@@ -17,6 +17,13 @@ JAX router speaks, so MORI and every baseline run identical code in both
 worlds. Transfer sizing and channel choice come from the actions themselves
 (``Offload.dst_tier``, ``Forward.source_tier``, ``.nbytes``), not from
 simulator-side bookkeeping.
+
+The PCIe/NVMe queue model itself lives in ``repro.core.transfers``
+(:class:`TransferChannels`) and is shared with the real serving path's
+:class:`~repro.serving.transfer_plane.ReplicaTransferPlane`: here each
+transfer is one single-chunk (fluid) job whose completion event lands in
+the simulator's heap; the real plane runs the same queues chunked at page
+granularity.
 """
 from __future__ import annotations
 
@@ -31,12 +38,14 @@ from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
 from repro.core.actions import (
     Action,
     CancelTransfer,
+    Discard,
     Forward,
     Migrate,
     Offload,
     PlacementPlan,
 )
 from repro.core.ledger import Channel, channel_for
+from repro.core.transfers import CopyJob, TransferChannels
 from repro.core.types import ProgramTrace, Tier, TransferCost
 from repro.sim.hardware import HwConfig
 from repro.sim.metrics import SimResult, percentile
@@ -58,16 +67,6 @@ class _Request:
     first_token_at: float | None = None
 
 
-@dataclass
-class _Transfer:
-    """One queued KV movement, executing a ledger-tracked action."""
-
-    nbytes: int
-    action_id: int
-    pid: str
-    req: _Request | None = None   # set for reloads: prefill follows the copy
-
-
 class _Replica:
     """Fluid-rate model of one engine replica."""
 
@@ -80,14 +79,15 @@ class _Replica:
         self.prefill_active: _Request | None = None
         self.prefill_remaining = 0.0
         self.prefill_q: deque[_Request] = deque()
-        self.xfer_active: _Transfer | None = None
-        self.xfer_q: deque[_Transfer] = deque()
-        # §7.1 extension: NVMe is its own channel, not the PCIe queue
-        self.ssd_active: _Transfer | None = None
-        self.ssd_q: deque[_Transfer] = deque()
+        # PCIe + NVMe copy queues: the shared single-chunk (fluid) model;
+        # completions land straight in the simulator's event heap
+        self.channels = TransferChannels(
+            cost=sim.xfer_cost, schedule=sim.at, on_done=self._transfer_done
+        )
         self.version = 0
         self.last_settle = 0.0
         self.busy_accum = 0.0
+        self.overlap_accum = 0.0
         self.step_samples = 0
 
     # --------------------------------------------------------------- decode
@@ -107,6 +107,10 @@ class _Replica:
             return
         if self.decode or self.prefill_active is not None:
             self.busy_accum += dt
+            if self.channels.in_flight():
+                # paper §6.2 "masked by GPU-CPU overlap": compute time
+                # during which a KV transfer was concurrently in flight
+                self.overlap_accum += dt
         if self.decode and dt > 0:
             tokens = dt / self.step_time()
             for r in self.decode.values():
@@ -178,70 +182,25 @@ class _Replica:
         self.add_decode(req, now)
 
     # ------------------------------------------------------------ transfers
-    # the PCIe channel maps to xfer_q, the NVMe drive to ssd_q; which
-    # channel a given action bills is decided once, by core.ledger.channel_for
-    def enqueue_transfer(
-        self, job: _Transfer, now: float, channel: Channel = Channel.PCIE
-    ) -> None:
-        if channel is Channel.NVME:
-            self.ssd_q.append(job)
-            if self.ssd_active is None:
-                self.start_next_transfer(now, channel)
-            return
-        self.xfer_q.append(job)
-        if self.xfer_active is None:
-            self.start_next_transfer(now)
-
-    def start_next_transfer(self, now: float, channel: Channel = Channel.PCIE) -> None:
-        cost = self.sim.xfer_cost
-        if channel is Channel.NVME:
-            if self.ssd_active is not None or not self.ssd_q:
-                return
-            job = self.ssd_q.popleft()
-            dur = cost.fixed_latency_s + job.nbytes / cost.ssd_bytes_per_s
-            self.ssd_active = job
-            self.sim.at(now + dur, lambda t: self.on_transfer_done(job, t, channel))
-            return
-        if self.xfer_active is not None or not self.xfer_q:
-            return
-        job = self.xfer_q.popleft()
-        dur = cost.fixed_latency_s + job.nbytes / cost.pcie_bytes_per_s
-        self.xfer_active = job
-        self.sim.at(now + dur, lambda t: self.on_transfer_done(job, t))
-
-    def on_transfer_done(
-        self, job: _Transfer, now: float, channel: Channel = Channel.PCIE
-    ) -> None:
-        if channel is Channel.NVME:
-            if self.ssd_active is not job:
-                return  # stale completion after a failure reset
-            self.ssd_active = None
-        else:
-            if self.xfer_active is not job:
-                return
-            self.xfer_active = None
+    # which channel a given action bills is decided once, by
+    # core.ledger.channel_for; the FIFO/serialization model itself lives in
+    # core.transfers (shared with the real serving transfer plane)
+    def _transfer_done(self, job: CopyJob, now: float) -> None:
         if not self.alive:
             return
         # acknowledge the ledger record; the scheduler may emit follow-ups
         self.sim.apply_plan(
             self.sim.sched.on_transfer_complete(job.pid, job.action_id, now)
         )
-        if job.req is not None:  # reload completed -> proceed to prefill
-            self.enqueue_prefill(job.req, now)
-        self.start_next_transfer(now, channel)
+        if job.payload is not None:  # reload completed -> proceed to prefill
+            self.enqueue_prefill(job.payload, now)
 
     def cancel_transfer(self, target_action_id: int) -> bool:
         """Drop a still-queued transfer. An already-active transfer is left
         to finish: offloads copy rather than move, so the late completion
         is wasted bandwidth, not a correctness problem (the scheduler has
         already closed the ledger record and ignores the stale ack)."""
-        for q_name in ("xfer_q", "ssd_q"):
-            q = getattr(self, q_name)
-            kept = deque(j for j in q if j.action_id != target_action_id)
-            if len(kept) != len(q):
-                setattr(self, q_name, kept)
-                return True
-        return False
+        return self.channels.cancel_queued(target_action_id) is not None
 
     def fail(self, now: float) -> None:
         self.settle(now)
@@ -249,10 +208,7 @@ class _Replica:
         self.decode.clear()
         self.prefill_active = None
         self.prefill_q.clear()
-        self.xfer_active = None
-        self.xfer_q.clear()
-        self.ssd_active = None
-        self.ssd_q.clear()
+        self.channels.reset()
         self.version += 1
 
     def recover(self, now: float) -> None:
@@ -362,8 +318,10 @@ class Simulation:
     def apply_plan(self, plan: PlacementPlan) -> None:
         """Execute a scheduler-emitted plan against the modeled hardware.
 
-        ``Discard`` and ``SetLabel`` are no-ops here: byte accounting lives
-        in the scheduler, and the sim has no block level to restamp.
+        ``SetLabel`` is a no-op here (no block level to restamp), and
+        ``Discard`` carries no byte accounting (that lives in the
+        scheduler) — but it does cancel the program's still-queued
+        transfers, mirroring the real router's Discard path.
         """
         if self.record_plans and plan.actions:
             self.action_log.extend(plan.actions)
@@ -372,6 +330,8 @@ class Simulation:
                 self._exec_forward(act)
             elif isinstance(act, Offload):
                 self._exec_offload(act)
+            elif isinstance(act, Discard):
+                self._exec_discard(act)
             elif isinstance(act, CancelTransfer):
                 self._exec_cancel(act)
             elif isinstance(act, Migrate):
@@ -395,9 +355,10 @@ class Simulation:
             self.reload_forwards += 1
             req.reload_bytes = act.nbytes
             # SSD-sourced reloads (§7.1 extension) bill the NVMe channel
-            rep.enqueue_transfer(
-                _Transfer(act.nbytes, act.action_id, act.pid, req),
-                self.now, channel_for(act.source_tier),
+            rep.channels.enqueue(
+                CopyJob(act.nbytes, act.action_id, act.pid, act.replica,
+                        channel_for(act.source_tier), payload=req),
+                self.now,
             )
         else:
             self.warm_forwards += 1
@@ -409,10 +370,25 @@ class Simulation:
             return
         # writes are staged through host DRAM: the contended channel is the
         # one the bytes are read from; NVMe stays reserved for reloads
-        rep.enqueue_transfer(
-            _Transfer(act.nbytes, act.action_id, act.pid),
-            self.now, channel_for(act.src_tier),
+        rep.channels.enqueue(
+            CopyJob(act.nbytes, act.action_id, act.pid, act.replica,
+                    channel_for(act.src_tier)),
+            self.now,
         )
+
+    def _exec_discard(self, act: Discard) -> None:
+        """An evicted program's still-queued transfers must not outlive
+        its KV: drop them and close their ledger records, so a later
+        ``open_offload`` cannot match a stale record from a previous
+        residency (parity with the real router's Discard path). A
+        transfer already *on the wire* is left to finish — its ack closes
+        the record as usual."""
+        if act.replica is None:
+            return
+        rep = self.replicas[act.replica]
+        for rec in self.sched.ledger.in_flight(replica=act.replica):
+            if rec.pid == act.pid and rep.cancel_transfer(rec.action_id):
+                self.sched.ledger.cancel(rec.action_id)
 
     def _exec_cancel(self, act: CancelTransfer) -> None:
         if self.replicas[act.replica].cancel_transfer(act.target_action_id):
@@ -425,8 +401,10 @@ class Simulation:
         if not rep.alive or act.nbytes <= 0:
             return
         self.migrations += 1
-        rep.enqueue_transfer(
-            _Transfer(act.nbytes, act.action_id, act.pid), self.now, Channel.PCIE
+        rep.channels.enqueue(
+            CopyJob(act.nbytes, act.action_id, act.pid, act.dst_replica,
+                    Channel.PCIE),
+            self.now,
         )
 
     # ------------------------------------------------------------ clients
@@ -576,4 +554,8 @@ class Simulation:
                 1e3 * sum(self.tick_overhead_s) / max(1, len(self.tick_overhead_s))
             ),
             tick_p99_ms=1e3 * percentile(self.tick_overhead_s, 0.99),
+            xfer_overlap_frac=(
+                sum(r.overlap_accum for r in self.replicas)
+                / max(1e-9, sum(r.busy_accum for r in self.replicas))
+            ),
         )

@@ -33,6 +33,10 @@ class SimResult:
     steps_completed: int
     tick_avg_ms: float               # Table 2: scheduler overhead
     tick_p99_ms: float
+    # fraction of compute-busy time during which a KV transfer was in
+    # flight on the same replica — the paper's "masked by GPU-CPU overlap"
+    # claim (§6.2) as a measurable number
+    xfer_overlap_frac: float = 0.0
 
     def to_dict(self) -> dict:
         return asdict(self)

@@ -6,12 +6,18 @@ from repro.traces.analysis import (
     phase_stats,
     tool_call_cdf,
 )
-from repro.traces.generator import TraceGenConfig, generate_corpus, generate_program
+from repro.traces.generator import (
+    TraceGenConfig,
+    burst_cancel_corpus,
+    generate_corpus,
+    generate_program,
+)
 from repro.traces.io import load_corpus, save_corpus
 
 __all__ = [
     "PhaseStats",
     "TraceGenConfig",
+    "burst_cancel_corpus",
     "busy_phase_durations",
     "generate_corpus",
     "generate_program",

@@ -122,3 +122,27 @@ def generate_corpus(
     """The paper's corpus: 186 complete traces (200 attempted - 14 failed)."""
     rng = random.Random(seed)
     return [generate_program(f"trace-{i:04d}", rng, cfg) for i in range(n_programs)]
+
+
+def burst_cancel_corpus() -> list[ProgramTrace]:
+    """Deterministic early-tool-return scenario (no randomness), shared by
+    tests/test_transfer_plane.py and benchmarks/transfer_overlap.py so the
+    CI overlap gate and the pinned regression exercise the same timeline:
+
+    pbig's mid-life context burst (50 → 120 tokens) overflows a
+    ~130-token GPU tier while both programs sit in tool calls, so the
+    control tick demotes the idler p1 (64 tokens materialized); pbig then
+    finishes and frees the tier, and p1 returns at t≈9 — before a
+    slow-link offload of its KV can complete, which is exactly the window
+    the scheduler's CancelTransfer path exploits."""
+    return [
+        ProgramTrace("pbig", [
+            RequestRecord(50, 4, 1.0, reasoning_wall_s=1.0),
+            RequestRecord(120, 4, 3.0, reasoning_wall_s=1.0),
+            RequestRecord(126, 4, 0.0, reasoning_wall_s=1.0),
+        ]),
+        ProgramTrace("p1", [
+            RequestRecord(60, 4, 8.0, reasoning_wall_s=1.0),
+            RequestRecord(76, 4, 0.0, reasoning_wall_s=1.0),
+        ]),
+    ]

@@ -304,9 +304,7 @@ def test_property_ack_interleaving_never_double_admits(
 
 # ----------------------------------------------------------- migration IR
 class TestMigrate:
-    def test_migrate_pass_moves_stuck_cpu_program(self):
-        from repro.core import Migrate
-
+    def _stuck_setup(self):
         d = Driver(MoriScheduler(
             2, TierCapacity(100, 200),
             SchedulerConfig(migrate_on_pressure=True, eager_promote=False),
@@ -325,14 +323,40 @@ class TestMigrate:
         stuck.materialized_tokens = 50
         d.sched.replicas[rep0].cpu_admit(stuck)
         d.request_arrived("stuck", 50, 1.0)
+        return d, stuck, rep0
+
+    def test_migrate_promotion_deferred_until_ack(self):
+        """The promotion (a reload Forward of the same bytes) must wait for
+        the migrate's on_transfer_complete — emitting it while the migrate
+        record is open would double-bill the PCIe channel and forward KV
+        that has not landed on the destination (regression)."""
+        from repro.core import Migrate
+
+        d, stuck, rep0 = self._stuck_setup()
         plan = d.tick(2.0)
         migs = plan.of_kind(Migrate)
         assert len(migs) == 1
         assert migs[0].src_replica == rep0 and migs[0].dst_replica != rep0
         assert stuck.replica == migs[0].dst_replica
-        assert stuck.tier is Tier.GPU  # promoted on arrival
-        fwd = plan.of_kind(Forward)[-1]
-        assert fwd.pid == "stuck" and fwd.source_tier is Tier.CPU
+        # the DRAM copy is still in flight: no promotion, no reload Forward
+        assert stuck.tier is Tier.CPU
+        assert not [f for f in plan.of_kind(Forward) if f.pid == "stuck"]
+        rec = d.sched.ledger.open_migrate("stuck")
+        assert rec is not None and rec.action_id == migs[0].action_id
+        assert d.sched.ledger.in_flight_bytes(replica=migs[0].dst_replica) == 50
+        # further ticks while the migrate is open must not promote either
+        plan2 = d.tick(3.0)
+        assert not [f for f in plan2.of_kind(Forward) if f.pid == "stuck"]
+        assert len(d.sched.ledger.in_flight(kind="migrate")) == 1
+        # ack lands the bytes: the deferred promotion opens its reload now
+        plan3 = d.on_transfer_complete("stuck", migs[0].action_id, 4.0)
+        assert d.sched.ledger.open_migrate("stuck") is None
+        fwd = [f for f in plan3.of_kind(Forward) if f.pid == "stuck"]
+        assert len(fwd) == 1 and fwd[0].source_tier is Tier.CPU
+        assert stuck.tier is Tier.GPU
+        # exactly one transfer open now: the reload billed after the move
+        reloads = d.sched.ledger.in_flight(kind="reload")
+        assert [r.pid for r in reloads] == ["stuck"]
         for rep in d.sched.replicas:
             rep.check()
 

@@ -131,6 +131,40 @@ class TestDemotion:
         s.request_completed("a", 5, 2.0)
         assert s.programs["a"].tier is Tier.CPU
 
+    def test_second_tick_counts_pending_lazy_demotions(self):
+        """Regression: a demote pass that runs while an earlier pass's
+        lazy-demote victim is still mid-step must count that victim's
+        pending bytes — the old code re-counted the same overflow and
+        demoted extra Acting programs whose eviction was never needed."""
+        s, ad = make(gpu=1000, cpu=1000)
+        s.program_arrived("p0", 1, 0.0)
+        s.request_arrived("p0", 60, 0.0)
+        s.notify_inference_started("p0", 0.0)   # long step: reasoning
+        s.program_arrived("q", 1, 0.0)
+        s.request_arrived("q", 30, 0.0)
+        s.notify_inference_started("q", 0.0)
+        s.replicas[0].capacity = TierCapacity(80, 1000)
+        s.tick(1.0)
+        # 90 used > 80: p0 (mid-step) marked for lazy demotion; its 60
+        # pending bytes already resolve the overflow, so q is untouched
+        assert s.programs["p0"].lazy_demote
+        assert not s.programs["q"].lazy_demote
+        s.request_completed("q", 0, 2.0)        # q finishes its step: Acting
+        plan = s.tick(3.0)                      # second pass, p0 still mid-step
+        # the pending lazy demotion covers the overflow: q must NOT be
+        # demoted (the bug double-counted and evicted it here)
+        assert s.programs["q"].tier is Tier.GPU
+        assert not s.programs["q"].lazy_demote
+        assert s.programs["q"].metrics.demotions == 0
+        assert not [o for o in plan.of_kind(Offload) if o.pid == "q"]
+        # p0's step finally ends: the deferred demotion fires, q keeps GPU
+        s.request_completed("p0", 0, 4.0)
+        assert s.programs["p0"].tier is Tier.CPU
+        assert s.programs["q"].tier is Tier.GPU
+        assert [o.pid for o in ad.of_kind(Offload)] == ["p0"]
+        s.replicas[0].check()
+        assert s.replicas[0].gpu_used <= 80
+
     def test_cpu_admission_control_spills_busiest_to_waiting(self):
         s, _ = make(gpu=1000, cpu=100)
         for pid, tool_s in [("busyish", 1.0), ("idler", 80.0)]:

@@ -53,8 +53,13 @@ class TestSimRouterEquivalence:
 
         engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
                         n_host_pages=64, max_slots=4, max_seq=512)
+        # sync_transfers: the compatibility mode whose execute-and-ack-
+        # immediately semantics the simulator's fluid model reproduces
+        # action-for-action on this trace (async mode acks on the transfer
+        # plane's own clock, so its stream interleaves differently)
         router = MoriRouter([engine], scheduler="mori",
-                            config=SchedulerConfig(), record_plans=True)
+                            config=SchedulerConfig(), record_plans=True,
+                            sync_transfers=True)
         router.replay(traces, vocab_size=cfg.vocab_size, max_new_tokens=4)
 
         # same KV geometry as the real engine, capacity far above the

@@ -1,0 +1,311 @@
+"""Async transfer plane: shared channel queues, page-granular streaming,
+mid-stream cancellation on the real serving path.
+
+The headline regression here is the early-tool-return scenario on *real*
+hardware: with transfers asynchronous, a program whose offload is still
+streaming when its tool call returns must be re-admitted warm — the
+scheduler's ``CancelTransfer`` aborts the copy, the staged partial page
+set rolls back, no host round trip is billed, and the generated tokens
+are identical to the synchronous-mode run (which pays the full
+offload+reload round trip for the same trace).
+"""
+from __future__ import annotations
+
+import heapq
+
+import pytest
+
+from repro.core.ledger import Channel
+from repro.core.transfers import CopyJob, TransferChannels
+from repro.core.types import TransferCost
+
+
+class _Clock:
+    """Deterministic event loop for driving TransferChannels directly."""
+
+    def __init__(self):
+        self.heap = []
+        self.seq = 0
+        self.now = 0.0
+
+    def schedule(self, eta, fn):
+        heapq.heappush(self.heap, (eta, self.seq, fn))
+        self.seq += 1
+
+    def run_until(self, t):
+        while self.heap and self.heap[0][0] <= t:
+            eta, _, fn = heapq.heappop(self.heap)
+            self.now = max(self.now, eta)
+            fn(eta)
+
+
+class TestTransferChannels:
+    def _channels(self, clock, done, chunks=None, bw=100.0):
+        return TransferChannels(
+            cost=TransferCost(
+                pcie_bytes_per_s=bw, ssd_bytes_per_s=bw / 2, fixed_latency_s=0.0
+            ),
+            schedule=clock.schedule,
+            on_done=lambda job, t: done.append((job.action_id, t)),
+            on_chunk=(lambda job, t: chunks.append((job.action_id, job.chunks_done)))
+            if chunks is not None
+            else None,
+        )
+
+    def test_fifo_serialization_per_channel(self):
+        clock, done = _Clock(), []
+        ch = self._channels(clock, done)
+        ch.enqueue(CopyJob(100, 1, "a"), 0.0)                    # 1.0 s
+        ch.enqueue(CopyJob(200, 2, "b"), 0.0)                    # +2.0 s
+        ch.enqueue(CopyJob(50, 3, "c", channel=Channel.NVME), 0.0)  # 1.0 s, own lane
+        clock.run_until(1.0)
+        assert done == [(1, 1.0), (3, 1.0)]  # NVMe overlaps PCIe
+        clock.run_until(3.0)
+        assert done == [(1, 1.0), (3, 1.0), (2, 3.0)]
+        assert not ch.in_flight()
+
+    def test_chunked_job_streams_pages(self):
+        clock, done, chunks = _Clock(), [], []
+        ch = self._channels(clock, done, chunks)
+        ch.enqueue(CopyJob(400, 7, "a", n_chunks=4), 0.0)  # 1 s per chunk
+        clock.run_until(2.5)
+        assert chunks == [(7, 1), (7, 2)]
+        assert done == []
+        clock.run_until(4.0)
+        assert chunks == [(7, 1), (7, 2), (7, 3), (7, 4)]
+        assert done == [(7, 4.0)]
+
+    def test_abort_mid_stream_stops_future_chunks(self):
+        clock, done, chunks = _Clock(), [], []
+        ch = self._channels(clock, done, chunks)
+        ch.enqueue(CopyJob(400, 7, "a", n_chunks=4), 0.0)
+        ch.enqueue(CopyJob(100, 8, "b"), 0.0)
+        clock.run_until(1.5)
+        job = ch.abort(7, 1.5)
+        assert job is not None and job.chunks_done == 1
+        clock.run_until(10.0)
+        # job 7 never completed, its remaining chunks never copied; the
+        # queued job behind it started at the abort and ran to completion
+        assert [d[0] for d in done] == [8]
+        assert chunks == [(7, 1), (8, 1)]
+        assert ch.pending_bytes() == 0
+
+    def test_cancel_queued_and_reset(self):
+        clock, done = _Clock(), []
+        ch = self._channels(clock, done)
+        ch.enqueue(CopyJob(100, 1, "a"), 0.0)
+        ch.enqueue(CopyJob(100, 2, "a"), 0.0)
+        assert ch.cancel_queued(2).action_id == 2
+        assert ch.cancel_queued(2) is None
+        assert ch.abort(1, 0.0).action_id == 1
+        ch.enqueue(CopyJob(100, 3, "b"), 0.0)
+        ch.reset()
+        clock.run_until(10.0)
+        assert done == []  # stale chunk events dropped after reset
+
+
+# ----------------------------------------------------- bf16 host round trip
+def test_pagepool_offload_reload_is_bit_exact():
+    """Regression: host pages stored device bf16 as fp16, whose exponent
+    range bf16 overflows to inf — an offload→reload round trip silently
+    corrupted large-magnitude KV. Raw-bits staging must be lossless."""
+    jnp = pytest.importorskip("jax.numpy")
+    import numpy as np
+
+    from repro.serving.kvpool import PagePool
+
+    pool = PagePool(layers=2, kv_heads=2, head_dim=4, page_tokens=4,
+                    n_device_pages=4, n_host_pages=4)
+    shape = (2, 4, 2, 4)  # [L, t, KH, HD]
+    # values far outside fp16 range, plus denormal-ish small ones
+    k = jnp.asarray(
+        np.linspace(-3e38, 3e38, num=int(np.prod(shape))).reshape(shape),
+        jnp.bfloat16,
+    )
+    v = jnp.asarray(
+        np.geomspace(1e-30, 1e30, num=int(np.prod(shape))).reshape(shape),
+        jnp.bfloat16,
+    )
+    page = pool.alloc_device()
+    pool.write_device_page(page, k, v)
+    k_bits = np.asarray(pool.k[:, page]).view(np.uint16).copy()
+    v_bits = np.asarray(pool.v[:, page]).view(np.uint16).copy()
+    assert np.isfinite(np.asarray(k, np.float32)).all()
+
+    hp = pool.offload_page(page)
+    assert hp is not None
+    dp = pool.reload_page(hp)
+    assert dp is not None
+    assert (np.asarray(pool.k[:, dp]).view(np.uint16) == k_bits).all()
+    assert (np.asarray(pool.v[:, dp]).view(np.uint16) == v_bits).all()
+
+
+def test_pagepool_staged_copy_keeps_source_until_freed():
+    """The streamed-offload primitives copy without freeing: the device
+    page stays valid (cancel-safety) until the commit explicitly frees."""
+    pytest.importorskip("jax")
+    import numpy as np
+
+    from repro.serving.kvpool import PagePool
+
+    pool = PagePool(layers=1, kv_heads=1, head_dim=2, page_tokens=2,
+                    n_device_pages=2, n_host_pages=2)
+    import jax.numpy as jnp
+
+    k = jnp.full((1, 2, 1, 2), 7.0, jnp.bfloat16)
+    page = pool.alloc_device()
+    pool.write_device_page(page, k, k)
+    before_dev = pool.device_free_count()
+    hp = pool.copy_page_to_host(page)
+    assert hp is not None
+    assert pool.device_free_count() == before_dev  # source not freed
+    # rollback path: discard the staged host copy, device copy untouched
+    pool.free_host(hp)
+    assert (np.asarray(pool.k[:, page], np.float32) == 7.0).all()
+
+
+# ------------------------------------------------------- real-path replay
+@pytest.fixture(scope="module")
+def setup():
+    pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import Model, materialize
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+    return cfg, params
+
+
+def _run(cfg, params, *, sync: bool):
+    from repro.core import SchedulerConfig
+    from repro.serving import Engine, MoriRouter
+    from repro.traces import burst_cancel_corpus
+
+    kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                    n_host_pages=64, max_slots=4, max_seq=256)
+    # p1's 64-token offload takes ~20 virtual seconds: queued at the t=3
+    # tick, still mid-stream (2-3 of 8 pages staged) at p1's t=9 return
+    cost = TransferCost(pcie_bytes_per_s=64 * kvb / 20.0)
+    router = MoriRouter(
+        [engine], scheduler="mori",
+        gpu_capacity_bytes=130 * kvb,
+        config=SchedulerConfig(tick_interval_s=1.0),
+        sync_transfers=sync, xfer_cost=cost, record_plans=True,
+    )
+    m = router.replay(burst_cancel_corpus(), vocab_size=cfg.vocab_size,
+                      max_new_tokens=4)
+    return router, m
+
+
+class TestRealPathCancel:
+    def test_early_return_cancels_streaming_offload(self, setup):
+        cfg, params = setup
+        router, m = _run(cfg, params, sync=False)
+        sync_router, sm = _run(cfg, params, sync=True)
+
+        # the tool call returned mid-stream: the offload was aborted...
+        assert m.cancelled_offloads > 0
+        assert m.cancelled_pages > 0          # partial page set rolled back
+        # ...so no host round trip was billed on the async path...
+        assert m.offloaded_pages == 0
+        assert m.reloaded_pages == 0 and m.nvme_reloaded_pages == 0
+        # ...while sync mode paid the full offload + reload for this trace
+        assert sm.cancelled_offloads == 0
+        assert sm.offloaded_pages > 0 and sm.reloaded_pages > 0
+        # and the generated tokens are identical in both modes (the warm
+        # re-admission served the same KV the round trip would have)
+        assert router.output_log == sync_router.output_log
+        assert m.steps_completed == sm.steps_completed == 5
+        # every transfer resolved: nothing left open in the ledger
+        assert len(router.sched.ledger) == 0
+        assert len(sync_router.sched.ledger) == 0
+        assert router.sched.ledger.cancelled == 1
+
+    def test_decode_overlaps_inflight_transfer(self, setup):
+        """pbig's t=6 step decodes while p1's offload is streaming: the
+        async path must record transfer/compute overlap; sync mode cannot
+        (every transfer completes inside apply_plan)."""
+        cfg, params = setup
+        router, m = _run(cfg, params, sync=False)
+        assert m.overlap_decode_steps > 0
+        assert m.peak_inflight_bytes > 0
+        _, sm = _run(cfg, params, sync=True)
+        assert sm.overlap_decode_steps == 0
+
+    def test_discard_mid_stream_closes_ledger_record(self, setup):
+        """Regression: evicting a live program whose offload is still
+        streaming (CPU-overflow pass emits a Discard, not a Cancel) must
+        both abort the copy job and close the ledger record — a stale
+        open offload would later match _cancel_inflight_offload and
+        cancel the wrong transfer."""
+        cfg, params = setup
+        from repro.core import Discard, SchedulerConfig, Tier, TierCapacity
+        from repro.core.types import TransferCost
+        from repro.serving import Engine, MoriRouter
+
+        kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                        n_host_pages=64, max_slots=2, max_seq=256)
+        router = MoriRouter(
+            [engine], scheduler="mori",
+            gpu_capacity_bytes=200 * kvb, cpu_capacity_bytes=200 * kvb,
+            config=SchedulerConfig(tick_interval_s=1.0),
+            xfer_cost=TransferCost(pcie_bytes_per_s=64 * kvb / 60.0),
+        )
+        router._push = lambda t, fn: None  # stand-in virtual clock
+        sched = router.sched
+        sched.program_arrived("p", kvb, 0.0)
+        router.apply_plan(sched.request_arrived("p", 60, 0.0))
+        sched.notify_inference_started("p", 0.0)
+        router.apply_plan(sched.request_completed("p", 4, 1.0))
+        # demote under pressure: the offload starts streaming on the plane
+        sched.replicas[0].capacity = TierCapacity(10 * kvb, 200 * kvb)
+        router.apply_plan(sched.tick(2.0))
+        assert router.planes[0].in_flight()
+        assert sched.ledger.open_offload("p") is not None
+        # CPU overflow evicts the still-streaming program to Waiting
+        sched.replicas[0].capacity = TierCapacity(10 * kvb, 0)
+        plan = sched.tick(3.0)
+        assert any(
+            d.pid == "p" and d.tier is Tier.CPU for d in plan.of_kind(Discard)
+        )
+        router.apply_plan(plan)
+        assert not router.planes[0].in_flight()
+        assert sched.ledger.open_offload("p") is None
+        assert len(sched.ledger) == 0
+        assert sched.ledger.cancelled == 1
+        router._push = None
+
+    def test_async_matches_sync_on_pressure_corpus(self, setup):
+        """Token-level parity on a generated multi-program corpus: async
+        transfers change *when* pages move, never *what* the engine
+        serves."""
+        cfg, params = setup
+        from repro.core import SchedulerConfig
+        from repro.serving import Engine, MoriRouter
+        from repro.traces import TraceGenConfig, generate_corpus
+
+        tg = TraceGenConfig(
+            min_steps=3, mean_steps=4, max_steps=4,
+            initial_context_mean=700, max_context=1800,
+            long_median_s=20.0, busy_calls_mean=2.0, idle_calls_mean=2.0,
+        )
+        corpus = generate_corpus(4, seed=5, cfg=tg)
+        logs = []
+        for sync in (False, True):
+            engine = Engine(cfg, params, page_tokens=8, n_device_pages=96,
+                            n_host_pages=96, max_slots=2, max_seq=320)
+            router = MoriRouter(
+                [engine], scheduler="mori",
+                gpu_capacity_bytes=500_000,
+                config=SchedulerConfig(tick_interval_s=2.0),
+                sync_transfers=sync,
+                xfer_cost=TransferCost(pcie_bytes_per_s=2e5),
+            )
+            m = router.replay(corpus, vocab_size=cfg.vocab_size,
+                              max_new_tokens=4)
+            assert m.steps_completed >= 12
+            assert len(router.sched.ledger) == 0
+            logs.append(router.output_log)
+        assert logs[0] == logs[1]

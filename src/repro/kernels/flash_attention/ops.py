@@ -1,5 +1,11 @@
-"""Public entry point: Pallas flash attention on TPU, oracle elsewhere."""
+"""Public entry point: Pallas flash attention on TPU, oracle elsewhere.
+
+``REPRO_KERNEL_INTERPRET=1`` routes the off-TPU path through the Pallas
+kernel in interpret mode (CI kernel-parity job); read at call time.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -12,6 +18,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None, q_offset
         return _pallas(
             q, k, v, causal=causal, window=window, softcap=softcap,
             q_offset=q_offset,
+        )
+    if os.environ.get("REPRO_KERNEL_INTERPRET", "0") == "1":
+        return _pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, interpret=True,
         )
     return _ref(
         q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset

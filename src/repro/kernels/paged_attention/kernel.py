@@ -50,6 +50,7 @@ def _kernel(
     kv_heads: int,
     q_per_kv: int,
     softcap: float | None,
+    window: int | None,
 ):
     b = pl.program_id(0)
     p = pl.program_id(1)
@@ -63,8 +64,15 @@ def _kernel(
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     length = lengths_ref[b]
+    # sliding-window decode: only positions [lo, length) are visible. Pages
+    # entirely below lo are skipped at the grid level (their DMA still runs —
+    # the index_map is position-blind — but no MXU work is issued).
+    lo = jnp.maximum(0, length - window) if window is not None else 0
+    visit = p * T < length
+    if window is not None:
+        visit &= (p + 1) * T > lo
 
-    @pl.when(p * T < length)
+    @pl.when(visit)
     def _compute():
         q = q_ref[0].astype(F32)                               # [H, D]
         D = q.shape[-1]
@@ -80,7 +88,10 @@ def _kernel(
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         pos = p * T + jax.lax.broadcasted_iota(jnp.int32, (1, 1, T), 2)
-        s = jnp.where(pos < length, s, -1e30)
+        valid = pos < length
+        if window is not None:
+            valid &= pos >= lo
+        s = jnp.where(valid, s, -1e30)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         alpha = jnp.exp(m_prev - m_new)
@@ -103,7 +114,7 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("softcap", "interpret")
+    jax.jit, static_argnames=("softcap", "window", "interpret")
 )
 def paged_attention(
     q: jax.Array,            # [B, H, D]
@@ -113,6 +124,7 @@ def paged_attention(
     lengths: jax.Array,      # [B] int32
     *,
     softcap: float | None = None,
+    window: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, H, D = q.shape
@@ -140,6 +152,7 @@ def paged_attention(
         kv_heads=KH,
         q_per_kv=G,
         softcap=softcap,
+        window=window,
     )
     return pl.pallas_call(
         kern,

@@ -1,19 +1,80 @@
-"""Public entry point: Pallas kernel on TPU, oracle fallback elsewhere."""
+"""Public entry point: Pallas kernel on TPU, oracle fallback elsewhere.
+
+``REPRO_KERNEL_INTERPRET=1`` routes the off-TPU path through the Pallas
+kernel in interpret mode instead of the jnp oracle — CI's kernel-parity job
+uses it so the TPU branch of this dispatch is never dead code on a CPU
+runner. The env var is read at call time so tests can flip it per-case.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 
 from repro.kernels.paged_attention.kernel import paged_attention as _pallas
+from repro.kernels.paged_attention.ref import (
+    paged_attention_decode_ref as _decode_ref,
+)
 from repro.kernels.paged_attention.ref import paged_attention_ref as _ref
 
 
-def paged_attention(q, k_pages, v_pages, block_tables, lengths, *, softcap=None):
+def _interpret_forced() -> bool:
+    return os.environ.get("REPRO_KERNEL_INTERPRET", "0") == "1"
+
+
+def paged_attention(
+    q, k_pages, v_pages, block_tables, lengths, *, softcap=None, window=None
+):
     """Decode attention over a paged KV pool (see kernel.py for layouts)."""
-    platform = jax.default_backend()
-    if platform == "tpu":
+    if jax.default_backend() == "tpu":
         return _pallas(
-            q, k_pages, v_pages, block_tables, lengths, softcap=softcap
+            q, k_pages, v_pages, block_tables, lengths,
+            softcap=softcap, window=window,
+        )
+    if _interpret_forced():
+        return _pallas(
+            q, k_pages, v_pages, block_tables, lengths,
+            softcap=softcap, window=window, interpret=True,
         )
     # CPU/GPU: interpret the kernel for tiny shapes is too slow in prod paths;
     # use the jnp oracle (identical semantics, validated in tests).
-    return _ref(q, k_pages, v_pages, block_tables, lengths, softcap=softcap)
+    return _ref(
+        q, k_pages, v_pages, block_tables, lengths,
+        softcap=softcap, window=window,
+    )
+
+
+def paged_attention_decode(
+    q, k_new, v_new, k_pages, v_pages, block_tables, lengths, tail_pages,
+    tail_offsets, *, softcap=None, window=None,
+):
+    """Decode attention for a token whose KV is not yet in the pool.
+
+    The serving hot path: ``k_new``/``v_new`` ``[B, KH, D]`` belong at
+    ``(tail_pages[b], tail_offsets[b])`` = global position ``lengths - 1``.
+    On CPU/GPU the oracle inserts them into its dense gather, so a layer
+    scan over this op never materializes a full-pool copy per layer (the
+    engine commits all layers' appends in one batched scatter after the
+    scan). On TPU (and in forced-interpret parity runs) they are scattered
+    into a copy of the layer's page slice before the Pallas kernel runs —
+    XLA cannot alias that update while the caller still holds the arrays
+    for the post-scan commit, so the TPU branch still pays one layer-slice
+    copy per layer; folding k_new/v_new into the kernel as operands (the
+    oracle's trick, done in VMEM) is the follow-up that removes it.
+    """
+    def _scatter_then_kernel(interpret: bool):
+        kp = k_pages.at[tail_pages, tail_offsets].set(k_new.astype(k_pages.dtype))
+        vp = v_pages.at[tail_pages, tail_offsets].set(v_new.astype(v_pages.dtype))
+        return _pallas(
+            q, kp, vp, block_tables, lengths,
+            softcap=softcap, window=window, interpret=interpret,
+        )
+
+    if jax.default_backend() == "tpu":
+        return _scatter_then_kernel(False)
+    if _interpret_forced():
+        return _scatter_then_kernel(True)
+    return _decode_ref(
+        q, k_new, v_new, k_pages, v_pages, block_tables, lengths,
+        softcap=softcap, window=window,
+    )

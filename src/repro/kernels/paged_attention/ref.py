@@ -1,5 +1,17 @@
 """Pure-jnp oracle for paged decode attention: gather pages densely, run
-masked softmax attention."""
+masked softmax attention.
+
+Semantics (shared with the Pallas kernel, validated in tests):
+
+* GQA — ``H = KH * G`` query heads share KH KV heads;
+* ``softcap`` — gemma2-style logit capping ``cap * tanh(s / cap)``;
+* ``window`` — sliding-window decode: only the last ``window`` positions
+  (``[length - window, length)``) are visible, matching
+  :func:`repro.models.layers.decode_attention`;
+* ragged ``lengths`` — positions at or past a sequence's length are
+  masked, so partially-filled tail pages and garbage pages beyond the
+  block table's live span never leak into the output.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,20 +20,58 @@ import jax.numpy as jnp
 F32 = jnp.float32
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, softcap=None):
-    B, H, D = q.shape
-    N, T, KH, _ = k_pages.shape
+def paged_attention_ref(
+    q, k_pages, v_pages, block_tables, lengths, *, softcap=None, window=None
+):
+    B = q.shape[0]
+    T, KH, D = k_pages.shape[1:]
     P = block_tables.shape[1]
-    G = H // KH
     # dense gather: [B, P*T, KH, D]
-    k = k_pages[block_tables].reshape(B, P * T, KH, D).astype(F32)
-    v = v_pages[block_tables].reshape(B, P * T, KH, D).astype(F32)
+    k = k_pages[block_tables].reshape(B, P * T, KH, D)
+    v = v_pages[block_tables].reshape(B, P * T, KH, D)
+    return _gathered_attention(q, k, v, lengths, softcap, window)
+
+
+def paged_attention_decode_ref(
+    q, k_new, v_new, k_pages, v_pages, block_tables, lengths,
+    *, softcap=None, window=None,
+):
+    """Decode-step oracle where the current token's KV (``k_new``/``v_new``
+    ``[B, KH, D]``, global position ``lengths - 1``) has *not* been written
+    to the pool yet: it is inserted into the gathered context locally.
+
+    Bit-identical to scattering into the tail page first and calling
+    :func:`paged_attention_ref` — but the insert touches a ``[B, P*T]``
+    gather, not the ``[N, T]`` pool, so a layer scan over this op never
+    copies the pool. The engine appends all layers' KV to the tail pages
+    in one batched scatter after the scan.
+    """
+    B = q.shape[0]
+    T, KH, D = k_pages.shape[1:]
+    P = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, P * T, KH, D)
+    v = v_pages[block_tables].reshape(B, P * T, KH, D)
+    idx = jnp.arange(B), lengths - 1
+    k = k.at[idx].set(k_new.astype(k.dtype))
+    v = v.at[idx].set(v_new.astype(v.dtype))
+    return _gathered_attention(q, k, v, lengths, softcap, window)
+
+
+def _gathered_attention(q, k, v, lengths, softcap, window):
+    B, H, D = q.shape
+    S = k.shape[1]
+    KH = k.shape[2]
+    G = H // KH
+    k = k.astype(F32)
+    v = v.astype(F32)
     qf = q.reshape(B, KH, G, D).astype(F32) * (D ** -0.5)
     s = jnp.einsum("bkgd,bskd->bkgs", qf, k)
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    pos = jnp.arange(P * T)[None, :]
+    pos = jnp.arange(S)[None, :]
     mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None] - window)
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v)

@@ -1,5 +1,11 @@
-"""Public entry point: Pallas SSD on TPU, chunked-jnp reference elsewhere."""
+"""Public entry point: Pallas SSD on TPU, chunked-jnp reference elsewhere.
+
+``REPRO_KERNEL_INTERPRET=1`` routes the off-TPU path through the Pallas
+kernel in interpret mode (CI kernel-parity job); read at call time.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -11,6 +17,8 @@ def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128):
     """Mamba-2 SSD scan. x [B,S,H,P]; B/C [B,S,1,N] (single group)."""
     if jax.default_backend() == "tpu":
         return _pallas(x, dt, A, Bm, Cm, chunk=chunk)
+    if os.environ.get("REPRO_KERNEL_INTERPRET", "0") == "1":
+        return _pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
     if Bm.ndim == 3:
         Bm, Cm = Bm[:, :, None, :], Cm[:, :, None, :]
     return _ref(x, dt, A, Bm, Cm, chunk=chunk)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import ShardingRules
+from repro.kernels.paged_attention.ops import paged_attention_decode
 from repro.kernels.ssd.ref import ssd_decode_step, ssd_reference
 from repro.models.config import ModelConfig
 from repro.models.params import Leaf
@@ -433,6 +434,46 @@ def _write_slot(cache, new, idx):
     """cache: [B, S, ...]; new: [B, ...]; idx: [B] position per row."""
     B = cache.shape[0]
     return cache.at[jnp.arange(B), idx].set(new.astype(cache.dtype))
+
+
+def apply_dense_block_paged(
+    p, x, cfg: ModelConfig, *, k_pages, v_pages, block_tables, tail_pages,
+    tail_offsets, lengths, window=None, ctx=NULL_CTX,
+):
+    """Decode mode of :func:`apply_dense_block` over a *paged* KV pool.
+
+    The block-table twin of the dense-slot decode branch: instead of a
+    ``[B, S_max, KH, HD]`` slot cache it takes one layer's slice of the
+    ``PagePool`` (``k_pages``/``v_pages`` ``[N, T, KH, HD]``) *read-only*
+    and attends through ``block_tables`` ``[B, P]`` with the
+    paged-attention kernel (GQA + softcap + sliding window). The new
+    token's KV (global position ``lengths[b] - 1``, destined for
+    ``(tail_pages[b], tail_offsets[b])``) is incorporated by the kernel
+    dispatch itself; it is *returned*, not written — the caller commits
+    every layer's append to the pool in one batched scatter after the
+    layer scan, so scanning this block never copies the pool per layer.
+    Returns ``(x', (k_new, v_new), aux)`` with k_new/v_new ``[B, KH, HD]``.
+    """
+    h_, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B = x.shape[0]
+    a_in = rmsnorm(x, p["ln1"])
+    positions = (lengths - 1)[:, None]
+    q, k, v = _project_qkv(
+        p["attn"], a_in, h_, kh, hd, positions, cfg.rope_theta, ctx=ctx
+    )
+    attn = paged_attention_decode(
+        q[:, 0], k[:, 0], v[:, 0], k_pages, v_pages, block_tables, lengths,
+        tail_pages, tail_offsets, softcap=cfg.attn_logit_softcap, window=window,
+    )                                                      # [B, H, D]
+    x = x + (attn.reshape(B, 1, h_ * hd) @ p["attn"]["wo"])
+    f_in = rmsnorm(x, p["ln2"])
+    if cfg.num_experts:
+        f_out, aux = apply_moe(p["ffn"], f_in, cfg, ctx)
+    else:
+        f_out, aux = apply_ffn(p["ffn"], f_in, ctx), 0.0
+    x = x + f_out
+    x = ctx.constrain(x, ("batch", "seq", "embed_act"))
+    return x, (k[:, 0], v[:, 0]), aux
 
 
 # ============================================================== mamba2 block

@@ -15,6 +15,7 @@ from repro.models.config import ModelConfig
 from repro.models.layers import (
     NULL_CTX,
     apply_dense_block,
+    apply_dense_block_paged,
     apply_ffn,
     apply_mamba_block,
     apply_shared_block,
@@ -429,19 +430,79 @@ class Model:
         logits = ctx.constrain(logits, ("batch", "vocab_act"))
         return logits, new_cache
 
+    # ------------------------------------------------------- paged decode
+    def decode_paged(
+        self, params, k_pages, v_pages, tokens, lengths, block_tables,
+        tail_pages, tail_offsets, ctx=NULL_CTX,
+    ):
+        """One block-table decode step (dense-cache families only).
+
+        The paged twin of :meth:`decode`: the KV cache is the serving
+        engine's ``PagePool`` arrays ``k_pages``/``v_pages``
+        ``[L, N, T, KH, HD]`` — not a per-slot dense buffer — and each
+        sequence reads its context through ``block_tables`` ``[B, P]``.
+        The new token's KV (global position ``lengths[b] - 1``) is carried
+        out of the layer scan and appended at ``(tail_pages[b],
+        tail_offsets[b])`` in ONE batched scatter for all layers — with
+        input donation that is an in-place pool update, so a decode step
+        never copies the pool (the old per-layer write forced L full-pool
+        copies through the scan). Layers scan exactly like :meth:`decode`
+        so compile stays O(1) in depth.
+        Returns ``(logits [B, V], k_pages', v_pages')``.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe", "vlm") and (
+            not cfg.local_global_alternating
+        ), "paged decode serves the dense-cache families"
+        x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # [B,1,d]
+
+        def body(h, xs):
+            p, kp, vp = xs
+            h, (k_new, v_new), _ = apply_dense_block_paged(
+                p, h, cfg, k_pages=kp, v_pages=vp, block_tables=block_tables,
+                tail_pages=tail_pages, tail_offsets=tail_offsets,
+                lengths=lengths, window=cfg.sliding_window, ctx=ctx,
+            )
+            return h, (k_new, v_new)
+
+        x, (k_news, v_news) = jax.lax.scan(
+            body, x, (params["blocks"], k_pages, v_pages)
+        )
+        # commit all layers' appends at once: k_news/v_news [L, B, KH, HD]
+        # land at [:, tail_pages[b], tail_offsets[b]] (unique per row)
+        k_pages = k_pages.at[:, tail_pages, tail_offsets].set(
+            k_news.astype(k_pages.dtype)
+        )
+        v_pages = v_pages.at[:, tail_pages, tail_offsets].set(
+            v_news.astype(v_pages.dtype)
+        )
+        h = rmsnorm(x[:, 0, :], params["ln_f"])
+        logits = softcap((h @ params["head"]).astype(F32), cfg.final_logit_softcap)
+        logits = ctx.constrain(logits, ("batch", "vocab_act"))
+        return logits, k_pages, v_pages
+
     # ------------------------------------------------------------ prefill
-    def prefill(self, params, batch: dict, ctx=NULL_CTX, prefix=None):
+    def prefill(self, params, batch: dict, ctx=NULL_CTX, prefix=None,
+                logit_index: int | None = None):
         """Full- or suffix-context forward; returns (last_logits, cache).
 
         With ``prefix`` (stacked radix-cached KV), this is chunked prefill:
         only ``batch["tokens"]`` (the suffix) is computed, attending over
         prefix+suffix. The returned cache covers the suffix only.
+
+        ``logit_index`` names the *token* position whose logits to return
+        (default: the last). The serving engine pads suffixes to a fixed
+        bucket so prefill compiles once per bucket instead of once per
+        length — causality guarantees positions at or before
+        ``logit_index`` never see the padding.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
         x = jnp.take(params["embed"], tokens, axis=0)
+        n_img = 0
         if cfg.family == "vlm":
             img = batch["image_embeds"].astype(x.dtype)
+            n_img = img.shape[1]
             x = jnp.concatenate([img, x], axis=1)
         S = x.shape[1]
         q_off = 0 if prefix is None else prefix["k"].shape[2]
@@ -451,7 +512,8 @@ class Model:
             params, x, positions, ctx, collect_cache=True,
             frames=batch.get("frames"), prefix=prefix,
         )
-        h = rmsnorm(h[:, -1, :], params["ln_f"])
+        idx = -1 if logit_index is None else n_img + logit_index
+        h = rmsnorm(h[:, idx, :], params["ln_f"])
         logits = softcap((h @ params["head"]).astype(F32), cfg.final_logit_softcap)
         return logits, cache
 

@@ -6,7 +6,18 @@ This is the execution plane the MORI scheduler drives in the real system:
 * RadixAttention-style prefix reuse via :class:`TypedRadixTree` — a new
   request whose prefix is cached skips prefill for those pages (chunked
   prefill over the radix prefix),
-* continuous batching decode over fixed slots (JetStream-style),
+* **block-table decode** (default): the pool *is* the decode state.
+  Continuous-batching decode runs the paged-attention kernel straight off
+  the ``PagePool`` through per-slot block tables; each step appends the
+  new token's KV into the slot's tail page in place. ``submit()`` writes
+  suffix prefill KV directly into pool pages (cached prefix pages are
+  *referenced*, never copied) and ``_finish`` hands the already-resident
+  full pages to the radix tree — the dense-slot path's
+  gather → concatenate → slot-write → write-back round trip is gone,
+  and a program's KV never exists anywhere but the pool,
+* ``dense_slots=True`` compatibility knob: the pre-block-table decode
+  path (JetStream-style fixed slot buffers), kept token-identical to the
+  paged path by a golden test and used as the benchmark baseline,
 * engine-level eviction that follows the scheduler's typed labels
   (paper §4.3.2): GPU evicts inactive->idle->busy, host evicts
   inactive->busy->idle, LRU within type,
@@ -58,6 +69,16 @@ class _Slot:
     cached_tokens: int = 0
     prefilled_tokens: int = 0
     reloaded_pages: int = 0
+    # block-table decode state (paged mode): page ids covering positions
+    # [i*T, (i+1)*T); entries below ``owned_from`` are shared radix pages
+    # (read-only, pinned), entries from ``owned_from`` on are slot-owned
+    table: list[int] = field(default_factory=list)
+    owned_from: int = 0
+    # the radix nodes backing table[:owned_from] — refcount-held for the
+    # slot's lifetime so eviction/offload can never recycle a device page
+    # a live block table still points at (they may belong to ANOTHER
+    # program sharing the prefix, which tree.pin(pid) does not cover)
+    prefix_nodes: list = field(default_factory=list)
 
 
 class Engine:
@@ -72,6 +93,9 @@ class Engine:
         max_slots: int = 4,
         max_seq: int = 512,
         placement: ReplicaPlacement | None = None,
+        dense_slots: bool = False,
+        table_bucket_pages: int = 4,
+        prefill_bucket_tokens: int = 32,
     ):
         assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global_alternating, (
             "the real engine serves dense-cache families; see DESIGN.md"
@@ -93,6 +117,22 @@ class Engine:
         self.page_tokens = page_tokens
         self.max_slots = max_slots
         self.max_seq = max_seq
+        self.dense_slots = dense_slots
+        # suffix prefill pads to this bucket so jit compiles once per bucket
+        # (not once per context length); causality keeps outputs identical
+        self.prefill_bucket = max(1, prefill_bucket_tokens)
+        self.pages_per_slot = -(-max_seq // page_tokens)
+        # Paged mode stores decode state IN the pool, so the device pool is
+        # provisioned with the HBM the dense slot buffers used to occupy:
+        # pages_per_slot per slot plus one scratch page per slot (inactive
+        # batch rows write their garbage token there, mirroring the dense
+        # path's harmless writes into unused slot rows). The reserve is
+        # excluded from the router's radix-capacity accounting via
+        # ``decode_reserve_pages``.
+        self.decode_reserve_pages = (
+            0 if dense_slots else max_slots * (self.pages_per_slot + 1)
+        )
+        self.radix_device_pages = n_device_pages  # cache budget (sans reserve)
         from repro.serving.kvpool import PagePool
 
         self.pool = PagePool(
@@ -100,18 +140,27 @@ class Engine:
             kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim,
             page_tokens=page_tokens,
-            n_device_pages=n_device_pages,
+            n_device_pages=n_device_pages + self.decode_reserve_pages,
             n_host_pages=n_host_pages,
         )
         self.tree = TypedRadixTree(page_tokens)
-        L, KH, HD = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
-        self.slot_k = jnp.zeros((L, max_slots, max_seq, KH, HD), jnp.bfloat16)
-        self.slot_v = jnp.zeros_like(self.slot_k)
         self.lengths = np.zeros(max_slots, np.int32)
         self.last_token = np.zeros(max_slots, np.int32)
         self.slots: dict[int, _Slot] = {}
         self._free_slots = list(range(max_slots))
-        self._decode_fn = jax.jit(self._decode_impl)
+        if dense_slots:
+            L, KH, HD = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+            self.slot_k = jnp.zeros((L, max_slots, max_seq, KH, HD), jnp.bfloat16)
+            self.slot_v = jnp.zeros_like(self.slot_k)
+            self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(1, 2))
+        else:
+            self._scratch_pages = [
+                self.pool.alloc_device() for _ in range(max_slots)
+            ]
+            self._table_bucket = table_bucket_pages
+            self._paged_decode_fn = jax.jit(
+                self._paged_decode_impl, donate_argnums=(1, 2)
+            )
         # metrics
         self.steps = 0
         self.evicted_pages = {"gpu": 0, "cpu": 0}
@@ -119,6 +168,37 @@ class Engine:
     # ------------------------------------------------------------ admission
     def has_slot(self) -> bool:
         return bool(self._free_slots)
+
+    def warmup(self) -> None:
+        """Precompile every decode-step shape before admitting traffic.
+
+        The block-table path compiles once per table bucket (tables are
+        padded to ``table_bucket_pages``); running each bucket here on the
+        per-slot scratch pages means serving never hits a jit stall when a
+        batch first crosses a bucket boundary. The dense path has a single
+        shape. Must run on an idle engine (the dummy step writes garbage
+        KV into scratch pages / slot position 0, both overwritten by the
+        first real submit)."""
+        assert not self.slots, "warmup must run on an idle engine"
+        toks = jnp.zeros(self.max_slots, jnp.int32)
+        lens = jnp.ones(self.max_slots, jnp.int32)
+        if self.dense_slots:
+            _, self.slot_k, self.slot_v = self._decode_fn(
+                self.params, self.slot_k, self.slot_v, toks, lens
+            )
+            return
+        scratch = np.asarray(self._scratch_pages, np.int32)
+        n_buckets = -(-self.pages_per_slot // self._table_bucket)
+        for i in range(1, n_buckets + 1):
+            p_pad = i * self._table_bucket
+            tables = np.repeat(scratch[:, None], p_pad, axis=1)
+            k_pages, v_pages = self.pool.block_table_view()
+            _, new_k, new_v = self._paged_decode_fn(
+                self.params, k_pages, v_pages, toks, lens,
+                jnp.asarray(tables), jnp.asarray(scratch),
+                jnp.zeros(self.max_slots, jnp.int32),
+            )
+            self.pool.adopt(new_k, new_v)
 
     def submit(self, req: EngineRequest) -> int:
         """Admit one request: radix match -> reload -> chunked prefill."""
@@ -135,29 +215,32 @@ class Engine:
         suffix = req.tokens[cached:]
         assert suffix, "request must extend its cached prefix"
 
+        # pin before touching the pool: suffix-page allocation below may
+        # evict, and the prefix chain a block table points at must survive.
+        # tree.pin covers the program's own nodes; the matched chain is
+        # refcount-held separately because a shared prefix may belong to a
+        # different program (released in _finish)
+        self.tree.pin(pid)
+        if not self.dense_slots:
+            for node in nodes:
+                node.refcount += 1
+
         prefix = None
         if pages:
             pk, pv = self.pool.read_device_pages(pages)
             prefix = {"k": pk[:, None], "v": pv[:, None]}       # [L,1,Sp,KH,HD]
 
-        batch = {"tokens": jnp.asarray([suffix], jnp.int32)}
+        pad = (-len(suffix)) % self.prefill_bucket
+        batch = {"tokens": jnp.asarray([suffix + [0] * pad], jnp.int32)}
         logits, cache = self.model.prefill(
-            self.params, batch, ctx=self.ctx, prefix=prefix
+            self.params, batch, ctx=self.ctx, prefix=prefix,
+            logit_index=len(suffix) - 1,
         )
         first_token = int(jnp.argmax(logits[0]))
 
         # 3. install into a decode slot
         sid = self._free_slots.pop()
         length = len(req.tokens)
-        k_ctx = cache["k"][:, 0]                                # [L,Ssuf,KH,HD]
-        v_ctx = cache["v"][:, 0]
-        if prefix is not None:
-            k_ctx = jnp.concatenate([prefix["k"][:, 0], k_ctx], axis=1)
-            v_ctx = jnp.concatenate([prefix["v"][:, 0], v_ctx], axis=1)
-        self.slot_k = self.slot_k.at[:, sid, :length].set(k_ctx)
-        self.slot_v = self.slot_v.at[:, sid, :length].set(v_ctx)
-        self.lengths[sid] = length
-        self.last_token[sid] = first_token
         slot = _Slot(
             request=req,
             slot_id=sid,
@@ -167,22 +250,89 @@ class Engine:
             prefilled_tokens=len(suffix),
             reloaded_pages=reloaded,
         )
+        k_suf = cache["k"][:, 0, : len(suffix)]                 # [L,Ssuf,KH,HD]
+        v_suf = cache["v"][:, 0, : len(suffix)]
+        if self.dense_slots:
+            k_ctx, v_ctx = k_suf, v_suf
+            if prefix is not None:
+                k_ctx = jnp.concatenate([prefix["k"][:, 0], k_ctx], axis=1)
+                v_ctx = jnp.concatenate([prefix["v"][:, 0], v_ctx], axis=1)
+            self.slot_k = self.slot_k.at[:, sid, :length].set(k_ctx)
+            self.slot_v = self.slot_v.at[:, sid, :length].set(v_ctx)
+        else:
+            # block-table install: reference the cached prefix pages and
+            # write the suffix KV straight into freshly-allocated pool
+            # pages — no dense materialization, no write-back at finish
+            T = self.page_tokens
+            slot.table = list(pages)
+            slot.owned_from = len(pages)
+            slot.prefix_nodes = nodes
+            new_pages: list[int] = []
+            try:
+                for _ in range(len(pages), -(-length // T)):
+                    new_pages.append(self._alloc_decode_page())
+            except RuntimeError:
+                for page in new_pages:
+                    self.pool.free_device(page)
+                for node in nodes:
+                    node.refcount = max(0, node.refcount - 1)
+                self.tree.unpin(pid)
+                self._free_slots.append(sid)
+                raise
+            slot.table.extend(new_pages)
+            self.pool.write_device_pages(new_pages, k_suf, v_suf)
+        self.lengths[sid] = length
+        self.last_token[sid] = first_token
         self.slots[sid] = slot
-        self.tree.pin(pid)  # in-use pages are not evictable
         return sid
 
     def _reload_prefix(self, tokens: list[int]) -> int:
+        """Promote host-resident prefix pages to the device, best-effort.
+
+        Stops at the first failed reload: pages past the break point cannot
+        extend the *device-resident* prefix chain, so reloading them would
+        burn scarce device pages (and evictions) for zero cached-token
+        benefit. The chain is refcount-pinned while it streams so
+        ``_ensure_device_page`` can never evict a later chain node to make
+        room for an earlier one, and a fully-exhausted pool degrades to a
+        shorter cached prefix instead of failing the submit.
+        """
+        chain = self.tree.match_prefix_any_tier(tokens)
+        for node in chain:
+            node.refcount += 1
         n = 0
-        for node in self.tree.match_prefix_any_tier(tokens):
-            if node.device_page is None and node.host_page is not None:
-                self._ensure_device_page()
+        try:
+            for node in chain:
+                if node.device_page is not None:
+                    continue
+                try:
+                    self._ensure_device_page()
+                except RuntimeError:
+                    break            # pool exhausted and nothing evictable
                 dp = self.pool.reload_page(node.host_page)
                 if dp is None:
                     break
                 node.host_page = None
                 node.device_page = dp
                 n += 1
+        finally:
+            for node in chain:
+                node.refcount = max(0, node.refcount - 1)
         return n
+
+    def _alloc_decode_page(self) -> int:
+        """One device page for decode state (evicting cold cache if needed).
+
+        Decode-state pages are funded by the pool's decode reserve, so the
+        radix-cache budget is NOT consulted here — a cache legitimately
+        sitting at its budget must not lose a warm page to every tail-page
+        rollover; eviction only kicks in when the pool is genuinely out of
+        free pages."""
+        self._ensure_device_page(cache_page=False)
+        page = self.pool.alloc_device()
+        if page is None:
+            raise RuntimeError("device pool exhausted and nothing evictable")
+        return page
 
     # -------------------------------------------------------------- decode
     def _decode_impl(self, params, slot_k, slot_v, tokens, lengths):
@@ -191,6 +341,16 @@ class Engine:
             params, cache, tokens, lengths, ctx=self.ctx
         )
         return jnp.argmax(logits, axis=-1), new_cache["k"], new_cache["v"]
+
+    def _paged_decode_impl(
+        self, params, k_pages, v_pages, tokens, lengths, tables,
+        tail_pages, tail_offsets,
+    ):
+        logits, k_pages, v_pages = self.model.decode_paged(
+            params, k_pages, v_pages, tokens, lengths, tables,
+            tail_pages, tail_offsets, ctx=self.ctx,
+        )
+        return jnp.argmax(logits, axis=-1), k_pages, v_pages
 
     def step(self) -> list[Completion]:
         """One continuous-batching decode step across all active slots."""
@@ -201,9 +361,12 @@ class Engine:
             self.lengths[sid] += 1  # the token being decoded extends the ctx
         toks = jnp.asarray(self.last_token, jnp.int32)
         lens = jnp.asarray(np.maximum(self.lengths, 1), jnp.int32)
-        next_tok, self.slot_k, self.slot_v = self._decode_fn(
-            self.params, self.slot_k, self.slot_v, toks, lens
-        )
+        if self.dense_slots:
+            next_tok, self.slot_k, self.slot_v = self._decode_fn(
+                self.params, self.slot_k, self.slot_v, toks, lens
+            )
+        else:
+            next_tok = self._paged_step(toks, lens)
         next_tok = np.asarray(next_tok)
         done: list[Completion] = []
         for sid, slot in list(self.slots.items()):
@@ -215,32 +378,97 @@ class Engine:
                 done.append(self._finish(slot))
         return done
 
+    def _paged_step(self, toks, lens):
+        """Block-table decode: append KV to tail pages, attend via tables."""
+        T = self.page_tokens
+        for sid, slot in self.slots.items():
+            pos = int(self.lengths[sid]) - 1    # this step's write position
+            if pos // T == len(slot.table):     # tail page rolled over
+                slot.table.append(self._alloc_decode_page())
+        # tables are padded to a bucketed page count so jit recompiles at
+        # most pages_per_slot / bucket times per engine, while short
+        # contexts still attend over far fewer positions than max_seq
+        p_used = max(len(s.table) for s in self.slots.values())
+        p_pad = -(-p_used // self._table_bucket) * self._table_bucket
+        B = self.max_slots
+        tables = np.zeros((B, p_pad), np.int32)
+        tail_pages = np.zeros(B, np.int32)
+        tail_offsets = np.zeros(B, np.int32)
+        for sid in range(B):
+            slot = self.slots.get(sid)
+            if slot is None:
+                # inactive batch row: attend over (and write to) its private
+                # scratch page — never a live page
+                tables[sid, :] = self._scratch_pages[sid]
+                tail_pages[sid] = self._scratch_pages[sid]
+            else:
+                tables[sid, : len(slot.table)] = slot.table
+                pos = int(self.lengths[sid]) - 1
+                tail_pages[sid] = slot.table[pos // T]
+                tail_offsets[sid] = pos % T
+        k_pages, v_pages = self.pool.block_table_view()
+        next_tok, new_k, new_v = self._paged_decode_fn(
+            self.params, k_pages, v_pages, toks, lens,
+            jnp.asarray(tables), jnp.asarray(tail_pages),
+            jnp.asarray(tail_offsets),
+        )
+        self.pool.adopt(new_k, new_v)
+        return next_tok
+
     def _finish(self, slot: _Slot) -> Completion:
-        """Write the slot's full pages back to the pool + radix, free slot."""
+        """Persist the slot's full pages into the radix tree, free the slot.
+
+        Paged mode hands the already-resident pages over by id (zero copy,
+        and — unlike the dense path — persistence can never fail for lack
+        of free pages: the pages exist by construction). Dense mode copies
+        slot data back into freshly-allocated pool pages.
+        """
         req = slot.request
         all_tokens = req.tokens + slot.produced[:-1]  # last token has no KV yet
-        n_full = len(all_tokens) // self.page_tokens
+        T = self.page_tokens
+        n_full = len(all_tokens) // T
         have = len(self.tree.match_prefix(all_tokens))
-        new_pages = []
-        for p in range(have, n_full):
-            self._ensure_device_page()
-            page = self.pool.alloc_device()
-            if page is None:
-                break
-            lo, hi = p * self.page_tokens, (p + 1) * self.page_tokens
-            self.pool.write_device_page(
-                page,
-                self.slot_k[:, slot.slot_id, lo:hi],
-                self.slot_v[:, slot.slot_id, lo:hi],
-            )
-            new_pages.append(page)
+        if self.dense_slots:
+            new_pages = []
+            for p in range(have, n_full):
+                self._ensure_device_page()
+                page = self.pool.alloc_device()
+                if page is None:
+                    break
+                lo, hi = p * T, (p + 1) * T
+                self.pool.write_device_page(
+                    page,
+                    self.slot_k[:, slot.slot_id, lo:hi],
+                    self.slot_v[:, slot.slot_id, lo:hi],
+                )
+                new_pages.append(page)
+            covered = (have + len(new_pages)) * T
+        else:
+            # duplicates of pages another program inserted first, plus the
+            # partially-filled tail page, go back to the free list; the
+            # rest transfer ownership to the tree in place
+            new_pages = slot.table[have:n_full]
+            for p in range(slot.owned_from, have):
+                self.pool.free_device(slot.table[p])
+            if len(all_tokens) % T and n_full < len(slot.table):
+                self.pool.free_device(slot.table[n_full])
+            covered = n_full * T
+            for node in slot.prefix_nodes:
+                node.refcount = max(0, node.refcount - 1)
         self.tree.unpin(req.program_id)  # release the pages pinned at submit
-        covered = (have + len(new_pages)) * self.page_tokens
         self.tree.insert_chain(
             all_tokens[:covered], new_pages, req.program_id, TypeLabel.BUSY
         )
+        # budget enforcement happens where the cache GROWS: handing decode
+        # pages to the tree may push it past radix_device_pages, so trim
+        # back (typed order, LRU — fresh BUSY pages are the last victims).
+        # Decode-state allocations deliberately never evict; see
+        # _alloc_decode_page.
+        while self._cache_over_budget() and self._evict_one_cache_page():
+            pass
         self.slots.pop(slot.slot_id)
         self._free_slots.append(slot.slot_id)
+        self.lengths[slot.slot_id] = 0
         return Completion(
             program_id=req.program_id,
             output_tokens=slot.produced,
@@ -258,10 +486,38 @@ class Engine:
         return out
 
     # ---------------------------------------------- typed eviction machinery
-    def _ensure_device_page(self) -> None:
-        """Free one device page if the pool is exhausted (typed order)."""
-        if self.pool.device_free_count() > 0:
+    def _cache_over_budget(self) -> bool:
+        """Paged mode: is the radix cache at/over its device-page budget?
+
+        The pool is over-provisioned by ``decode_reserve_pages`` for decode
+        state, so raw free count no longer signals cache pressure — cache-
+        growing allocations (reloads) evict back to ``radix_device_pages``
+        so the cache cannot squat on the decode reserve indefinitely.
+        (Walks the tree; only consulted on cache-growing allocs, which sit
+        behind a host-side page copy anyway.)"""
+        if self.dense_slots:
+            return False
+        return self.tree.stats()["device_pages"] >= self.radix_device_pages
+
+    def _ensure_device_page(self, cache_page: bool = True) -> None:
+        """Free one device page if the pool is exhausted (typed order) or
+        a *cache-growing* allocation would push the radix cache past its
+        budgeted share of the pool (``cache_page=False`` for decode-state
+        pages, which the decode reserve funds)."""
+        over_budget = cache_page and self._cache_over_budget()
+        if self.pool.device_free_count() > 0 and not over_budget:
             return
+        if self._evict_one_cache_page():
+            return
+        if self.pool.device_free_count() > 0:
+            # over cache budget but every cached page is pinned by live
+            # decodes: degrade into the reserve headroom rather than fail
+            return
+        raise RuntimeError("device pool exhausted and nothing evictable")
+
+    def _evict_one_cache_page(self) -> bool:
+        """Spill the best victim page to host (typed order); False if every
+        cached page is pinned."""
         for node in self.tree.evictable("gpu"):
             dp = node.device_page
             hp = self.pool.offload_page(dp)  # spill to host if possible
@@ -273,8 +529,8 @@ class Engine:
                 self.pool.free_device(dp)
                 self.tree._gc(node)
             self.evicted_pages["gpu"] += 1
-            return
-        raise RuntimeError("device pool exhausted and nothing evictable")
+            return True
+        return False
 
     def _ensure_host_page(self) -> None:
         if self.pool.host_free_count() > 0:
@@ -300,16 +556,31 @@ class Engine:
         return n
 
     def reload_program(self, pid: str) -> int:
+        """Host -> GPU for all of the program's pages. Returns count.
+
+        The chain is refcount-held while it streams (mirroring
+        ``_reload_prefix``): with the cache at its budget, the budget
+        eviction inside ``_ensure_device_page`` would otherwise pick the
+        just-reloaded, LRU-stale nodes of this very program as victims —
+        a reload that silently undoes itself while billing full PCIe
+        traffic."""
+        nodes = self.tree.program_nodes(pid)
+        for node in nodes:
+            node.refcount += 1
         n = 0
-        for node in self.tree.program_nodes(pid):
-            if node.device_page is None and node.host_page is not None:
-                self._ensure_device_page()
-                dp = self.pool.reload_page(node.host_page)
-                if dp is None:
-                    break
-                node.host_page = None
-                node.device_page = dp
-                n += 1
+        try:
+            for node in nodes:
+                if node.device_page is None and node.host_page is not None:
+                    self._ensure_device_page()
+                    dp = self.pool.reload_page(node.host_page)
+                    if dp is None:
+                        break
+                    node.host_page = None
+                    node.device_page = dp
+                    n += 1
+        finally:
+            for node in nodes:
+                node.refcount = max(0, node.refcount - 1)
         return n
 
     def discard_program(self, pid: str, tier: Tier) -> None:

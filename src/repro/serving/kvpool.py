@@ -6,6 +6,13 @@ consumes per grid step. Host pages are numpy arrays (on a real TPU host:
 pinned DRAM reached via ``jax.device_get/put``; in this CPU container the
 transfer mechanics — block granularity, explicit copies, byte accounting —
 are identical, only the wire is missing).
+
+Since the block-table decode path landed, the pool **is** the decode
+state: :meth:`block_table_view` hands ``(k, v)`` straight to
+``Model.decode_paged`` / the Pallas ``paged_attention`` kernel, the
+engine's jitted (donated) step appends each new token's KV into the tail
+pages in one batched scatter, and :meth:`adopt` installs the updated
+arrays back. No dense per-slot copy of any page ever exists.
 """
 from __future__ import annotations
 
@@ -85,11 +92,64 @@ class PagePool:
         self._free_host.append(page)
 
     # -------------------------------------------------------------- writes
+    def block_table_view(self):
+        """The pool's device arrays ``(k, v)``, each
+        ``[L, n_pages, page_tokens, KH, HD]`` — the operand the block-table
+        decode path (``Model.decode_paged`` -> Pallas ``paged_attention``)
+        consumes directly. This is a zero-copy handle, not a gather: block
+        tables index into these arrays page by page."""
+        return self.k, self.v
+
+    def adopt(self, k, v) -> None:
+        """Install functionally-updated page arrays (same shapes/dtypes).
+
+        The engine's jitted decode step takes :meth:`block_table_view`,
+        appends the new tokens' KV into tail pages, and returns fresh
+        arrays (with donation the update is in-place on the device); this
+        re-points the pool at them. Page *ids* are stable across adopt —
+        only tail-page contents changed — so host copies, free lists and
+        in-flight transfer staging stay valid."""
+        assert k.shape == self.k.shape and v.shape == self.v.shape
+        self.k, self.v = k, v
+
+    def append_token(self, page: int, offset: int, k_tok, v_tok) -> None:
+        """Write one token's KV (``[L, KH, HD]``) into ``page`` at
+        ``offset`` — the host-side append-to-tail-page verb. The hot decode
+        path appends *inside* jit (``Model.decode_paged`` commits all
+        layers in one batched scatter); this method serves tests and
+        host-driven fixups."""
+        self.k = self.k.at[:, page, offset].set(k_tok.astype(self.k.dtype))
+        self.v = self.v.at[:, page, offset].set(v_tok.astype(self.v.dtype))
+
     def write_device_page(self, page: int, k_tokens, v_tokens) -> None:
         """k_tokens/v_tokens: [L, t<=page_tokens, KH, HD]."""
         t = k_tokens.shape[1]
         self.k = self.k.at[:, page, :t].set(k_tokens.astype(self.k.dtype))
         self.v = self.v.at[:, page, :t].set(v_tokens.astype(self.v.dtype))
+
+    def write_device_pages(self, pages: list[int], k_tokens, v_tokens) -> None:
+        """Write a token run spanning several pages in ONE scatter.
+
+        k_tokens/v_tokens: ``[L, S, KH, HD]`` with the run starting at a
+        page boundary; ``pages`` receive consecutive ``page_tokens``-sized
+        chunks (the last may be partial — it is zero-padded). One scatter
+        = one functional pool update, instead of a full-pool copy per page
+        (the prefill-into-pages hot path in ``Engine.submit``).
+        """
+        if not pages:
+            return
+        T = self.page_tokens
+        L, S, KH, HD = k_tokens.shape
+        pad = len(pages) * T - S
+        if pad:
+            widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k_tokens = jnp.pad(k_tokens, widths)
+            v_tokens = jnp.pad(v_tokens, widths)
+        idx = jnp.asarray(pages, jnp.int32)
+        kc = k_tokens.reshape(L, len(pages), T, KH, HD).astype(self.k.dtype)
+        vc = v_tokens.reshape(L, len(pages), T, KH, HD).astype(self.v.dtype)
+        self.k = self.k.at[:, idx].set(kc)
+        self.v = self.v.at[:, idx].set(vc)
 
     def read_device_pages(self, pages: list[int]):
         """Gather pages -> [L, n*page_tokens, KH, HD] (slot assembly)."""
@@ -176,3 +236,5 @@ class PagePool:
             offload_bytes=self.offload_bytes,
             reload_bytes=self.reload_bytes,
         )
+
+

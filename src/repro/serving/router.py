@@ -111,10 +111,15 @@ class MoriRouter:
             cfg0.num_layers * 2 * cfg0.num_kv_heads * cfg0.head_dim * 2
         )
         pool = engines[0].pool
+        # default GPU budget = the pool's *cache* capacity: the block-table
+        # engine provisions extra pages as decode state (the HBM its dense
+        # slot buffers used to occupy) and the scheduler must not place
+        # programs into that reserve
+        reserve = getattr(engines[0], "decode_reserve_pages", 0)
         gpu_cap = (
             gpu_capacity_bytes
             if gpu_capacity_bytes is not None
-            else pool.n_device_pages * pool.page_bytes
+            else (pool.n_device_pages - reserve) * pool.page_bytes
         )
         cpu_cap = (
             cpu_capacity_bytes

@@ -71,6 +71,80 @@ def test_paged_attention_softcap():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("window", [6, 16, 100])
+def test_paged_attention_sliding_window(window):
+    """Kernel vs ref across window sizes smaller than / spanning / larger
+    than the context (ragged lengths include a partially-filled tail page)."""
+    B, H, KH, D, T, P = 3, 8, 4, 64, 8, 4
+    q = randn((B, H, D), jnp.float32)
+    k = randn((B * P, T, KH, D), jnp.float32)
+    v = randn((B * P, T, KH, D), jnp.float32)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    lengths = jnp.asarray([T * P, 2 * T + 5, 3], jnp.int32)
+    out = paged_attention(q, k, v, tables, lengths, window=window, interpret=True)
+    ref = paged_attention_ref(q, k, v, tables, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_paged_attention_window_matches_decode_attention():
+    """Cross-oracle: the paged ref's window semantics equal the dense-slot
+    decode_attention the engine's compatibility path uses."""
+    from repro.models.layers import decode_attention
+
+    B, H, KH, D, T, P = 2, 4, 2, 64, 8, 3
+    window = 10
+    q = randn((B, H, D), jnp.float32)
+    k = randn((B * P, T, KH, D), jnp.float32)
+    v = randn((B * P, T, KH, D), jnp.float32)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    lengths = jnp.asarray([T * P - 2, T + 3], jnp.int32)
+    ref = paged_attention_ref(q, k, v, tables, lengths, window=window)
+    k_dense = k[tables].reshape(B, P * T, KH, D)
+    v_dense = v[tables].reshape(B, P * T, KH, D)
+    dense = decode_attention(
+        q, k_dense, v_dense, lengths=lengths, window=window
+    ).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dense), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_gqa_softcap_window_combined(dtype):
+    """The gemma2-shaped corner all at once: GQA 4:1 + logit softcap +
+    sliding window on ragged lengths with partial tail pages."""
+    B, H, KH, D, T, P = 2, 8, 2, 64, 16, 3
+    q = randn((B, H, D), dtype)
+    k = randn((B * P, T, KH, D), dtype)
+    v = randn((B * P, T, KH, D), dtype)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    lengths = jnp.asarray([2 * T + 7, T - 1], jnp.int32)
+    out = paged_attention(
+        q, k, v, tables, lengths, softcap=50.0, window=20, interpret=True
+    )
+    ref = paged_attention_ref(q, k, v, tables, lengths, softcap=50.0, window=20)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+    )
+
+
+def test_paged_attention_partial_tail_page_isolated():
+    """A partially-filled tail page: tokens at or past `lengths` in the
+    tail page must not affect the output (the block-table decode appends
+    there next step)."""
+    B, H, KH, D, T, P = 1, 4, 2, 64, 8, 2
+    q = randn((B, H, D), jnp.float32)
+    k = randn((B * P, T, KH, D), jnp.float32)
+    v = randn((B * P, T, KH, D), jnp.float32)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    lengths = jnp.asarray([T + 5], jnp.int32)  # tail page 5/8 full
+    out1 = paged_attention(q, k, v, tables, lengths, interpret=True)
+    k2 = k.at[1, 5:].set(123.0)  # poison the unwritten tail slots
+    v2 = v.at[1, 5:].set(-123.0)
+    out2 = paged_attention(q, k2, v2, tables, lengths, interpret=True)
+    ref2 = paged_attention_ref(q, k2, v2, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref2), rtol=2e-3, atol=2e-3)
+
+
 def test_paged_attention_ignores_garbage_beyond_length():
     """Pages past `lengths` must not affect the result (MORI evicts them)."""
     B, H, KH, D, T, P = 1, 4, 2, 64, 8, 3

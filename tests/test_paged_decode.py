@@ -1,0 +1,319 @@
+"""Block-table decode path: golden token identity vs the dense-slot
+compatibility path, pool append/adopt API, reload-under-pressure
+regressions, and the ops-level interpret dispatch the CI kernel-parity job
+exercises."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model, materialize
+from repro.serving import Engine, EngineRequest, MoriRouter
+from repro.serving.kvpool import PagePool
+from repro.traces import TraceGenConfig, generate_corpus
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    model = Model(cfg)
+    params = materialize(model.describe(), seed=0)
+    return cfg, model, params
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("page_tokens", 8)
+    kw.setdefault("n_device_pages", 64)
+    kw.setdefault("n_host_pages", 64)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 256)
+    return Engine(cfg, params, **kw)
+
+
+def replay_rounds(eng, *, rounds=3, new_tokens=4, n_programs=2, seed=7):
+    """Agentic multi-round replay: each round extends every program's
+    context with its previous outputs plus a couple of tool tokens, so
+    later rounds hit the radix cache and decode crosses page boundaries
+    (partial tail pages included — contexts are not page-multiples)."""
+    rng = np.random.default_rng(seed)
+    ctxs = {
+        f"p{i}": list(rng.integers(2, 500, size=37 + 5 * i)) for i in range(n_programs)
+    }
+    streams: dict[str, list[int]] = {pid: [] for pid in ctxs}
+    for _ in range(rounds):
+        for pid in ctxs:
+            eng.submit(EngineRequest(pid, list(ctxs[pid]), max_new_tokens=new_tokens))
+            comp = eng.run_to_completion()[0]
+            streams[pid].extend(comp.output_tokens)
+            ctxs[pid].extend(comp.output_tokens[:-1])
+            ctxs[pid].extend(int(t) for t in rng.integers(2, 500, size=3))
+    return streams
+
+
+class TestGoldenTokenIdentity:
+    def test_engine_replay_matches_dense_slots(self, setup):
+        """The tentpole's contract: dense_slots=True and the block-table
+        path produce token-identical streams on a replayed trace."""
+        cfg, _, params = setup
+        paged = make_engine(cfg, params)
+        dense = make_engine(cfg, params, dense_slots=True)
+        assert not paged.dense_slots and dense.dense_slots
+        s_paged = replay_rounds(paged)
+        s_dense = replay_rounds(dense)
+        assert s_paged == s_dense
+        # and the paged engine really served later rounds from the cache
+        assert paged.steps == dense.steps
+
+    def test_router_replay_matches_dense_slots(self, setup):
+        """Same corpus through MoriRouter on both engine modes: identical
+        per-program output streams and identical scheduler-visible cache
+        accounting (the decode reserve is excluded from the GPU budget)."""
+        cfg, _, params = setup
+        logs = {}
+        for mode in (False, True):
+            engines = [
+                make_engine(
+                    cfg, params, n_device_pages=96, n_host_pages=96,
+                    max_seq=384, dense_slots=mode,
+                )
+                for _ in range(2)
+            ]
+            router = MoriRouter(engines, scheduler="mori")
+            tg = TraceGenConfig(
+                min_steps=3, mean_steps=4, max_steps=4,
+                initial_context_mean=500, max_context=1600,
+            )
+            corpus = generate_corpus(3, seed=1, cfg=tg)
+            m = router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=4)
+            assert m.steps_completed >= 9
+            logs[mode] = (router.output_log, router.sched.replicas[0].capacity.gpu_kv_bytes)
+        assert logs[False][0] == logs[True][0]
+        assert logs[False][1] == logs[True][1]  # reserve-corrected budget
+
+    def test_paged_decode_matches_direct_forward_partial_tail(self, setup):
+        """Block-table decode with a partially-filled tail page equals an
+        iterative full-prefill oracle (page boundary crossed mid-decode)."""
+        cfg, model, params = setup
+        eng = make_engine(cfg, params)
+        ctx = list(range(2, 2 + 43))            # 5 full pages + 3-token tail
+        eng.submit(EngineRequest("p", ctx, max_new_tokens=8))
+        out = eng.run_to_completion()[0].output_tokens
+        ref, cur = [], list(ctx)
+        for _ in range(8):
+            logits, _ = model.prefill(params, {"tokens": jnp.asarray([cur], jnp.int32)})
+            t = int(jnp.argmax(logits[0]))
+            ref.append(t)
+            cur.append(t)
+        assert out == ref
+
+
+class TestPagePoolBlockTableApi:
+    def test_append_token_then_read_back(self):
+        pool = PagePool(
+            layers=2, kv_heads=2, head_dim=4, page_tokens=4,
+            n_device_pages=8, n_host_pages=4,
+        )
+        page = pool.alloc_device()
+        rng = np.random.default_rng(0)
+        toks = [jnp.asarray(rng.standard_normal((2, 2, 4)), jnp.bfloat16)
+                for _ in range(3)]
+        for i, t in enumerate(toks):
+            pool.append_token(page, i, t, -t)
+        k, v = pool.read_device_pages([page])
+        for i, t in enumerate(toks):
+            np.testing.assert_array_equal(np.asarray(k[:, i]), np.asarray(t))
+            np.testing.assert_array_equal(np.asarray(v[:, i]), np.asarray(-t))
+
+    def test_block_table_view_is_zero_copy_and_adopt_swaps(self):
+        pool = PagePool(
+            layers=1, kv_heads=1, head_dim=4, page_tokens=2,
+            n_device_pages=4, n_host_pages=2,
+        )
+        k, v = pool.block_table_view()
+        assert k is pool.k and v is pool.v        # a handle, not a gather
+        k2 = k.at[0, 0, 0].set(1.0)
+        pool.adopt(k2, v)
+        assert pool.k is k2
+        with pytest.raises(AssertionError):
+            pool.adopt(k2[:, :1], v)              # shape change rejected
+
+    def test_decode_reserve_excluded_from_router_budget(self, setup):
+        cfg, _, params = setup
+        eng = make_engine(cfg, params, n_device_pages=32)
+        assert eng.decode_reserve_pages > 0
+        assert eng.pool.n_device_pages == 32 + eng.decode_reserve_pages
+        router = MoriRouter([eng], scheduler="mori")
+        assert router.sched.replicas[0].capacity.gpu_kv_bytes == 32 * eng.pool.page_bytes
+
+
+class TestReloadUnderPressure:
+    def _warm_offloaded_program(self, cfg, params, **kw):
+        eng = make_engine(cfg, params, **kw)
+        ctx = list(range(2, 66))                  # 8 full pages @ T=8
+        eng.submit(EngineRequest("p", ctx, max_new_tokens=3))
+        comp = eng.run_to_completion()[0]
+        n_off = eng.offload_program("p")
+        assert n_off >= 6
+        return eng, ctx, comp
+
+    def test_reload_stops_at_first_failure(self, setup, monkeypatch):
+        """Once a reload fails, _reload_prefix must not keep burning device
+        pages (or evictions) on nodes past the break point — they cannot
+        extend the device-resident prefix chain."""
+        cfg, _, params = setup
+        eng, ctx, _ = self._warm_offloaded_program(cfg, params)
+        ensure_calls = []
+        real_ensure = eng._ensure_device_page
+
+        def flaky_ensure(*a, **kw):
+            ensure_calls.append(1)
+            if len(ensure_calls) > 2:
+                raise RuntimeError("device pool exhausted and nothing evictable")
+            return real_ensure(*a, **kw)
+
+        reload_calls = []
+        real_reload = eng.pool.reload_page
+
+        def counting_reload(hp):
+            reload_calls.append(hp)
+            return real_reload(hp)
+
+        monkeypatch.setattr(eng, "_ensure_device_page", flaky_ensure)
+        monkeypatch.setattr(eng.pool, "reload_page", counting_reload)
+        n = eng._reload_prefix(ctx)
+        assert n == 2
+        assert len(reload_calls) == 2             # no attempts past the break
+
+    def test_submit_survives_reload_exhaustion(self, setup, monkeypatch):
+        """A pool that cannot host a single reload (exhausted for cache,
+        nothing evictable) degrades the submit to a cold prefill — the
+        RuntimeError from the eviction machinery must not escape submit()."""
+        cfg, _, params = setup
+        eng, ctx, comp = self._warm_offloaded_program(cfg, params)
+        real_ensure = eng._ensure_device_page
+        in_reload = [False]
+
+        def exhausted_for_reload(*a, **kw):
+            if in_reload[0]:
+                raise RuntimeError("device pool exhausted and nothing evictable")
+            return real_ensure(*a, **kw)
+
+        real_reload_prefix = eng._reload_prefix
+
+        def guarded_reload_prefix(tokens):
+            in_reload[0] = True
+            try:
+                return real_reload_prefix(tokens)
+            finally:
+                in_reload[0] = False
+
+        monkeypatch.setattr(eng, "_ensure_device_page", exhausted_for_reload)
+        monkeypatch.setattr(eng, "_reload_prefix", guarded_reload_prefix)
+        ctx2 = ctx + comp.output_tokens[:-1] + [7, 8, 9]
+        eng.submit(EngineRequest("p", ctx2, max_new_tokens=3))
+        c2 = eng.run_to_completion()[0]
+        assert c2.reloaded_pages == 0             # nothing reloaded under pressure
+        assert c2.cached_tokens == 0              # device chain fully cold
+        assert c2.prefilled_tokens == len(ctx2)   # recomputed instead of crashing
+
+    def test_reload_program_does_not_self_evict(self, setup):
+        """reload_program with the cache at its budget: the budget eviction
+        must never pick the just-reloaded nodes of the same program as
+        victims (the reload would silently undo itself while billing
+        full PCIe traffic)."""
+        cfg, _, params = setup
+        eng, ctx, _ = self._warm_offloaded_program(cfg, params)
+        eng.radix_device_pages = 1                # cache budget saturated
+        n = eng.reload_program("p")
+        chain = eng.tree.program_nodes("p")
+        assert n == len(chain)
+        assert all(node.device_page is not None for node in chain)
+        assert all(node.refcount == 0 for node in chain)
+
+    def test_reload_does_not_evict_later_chain_nodes(self, setup):
+        """The chain is refcount-held while it streams: making room for an
+        earlier node must never evict a later node of the same prefix."""
+        cfg, _, params = setup
+        eng, ctx, _ = self._warm_offloaded_program(cfg, params)
+        eng.reload_program("p")                   # everything device-resident
+        chain = eng.tree.match_prefix_any_tier(ctx)
+        node0 = chain[0]
+        hp = eng.pool.offload_page(node0.device_page)
+        node0.device_page, node0.host_page = None, hp
+        # force pressure: cache far over budget, so the reload of node0
+        # would love to evict — the only candidates are chain nodes
+        eng.radix_device_pages = 1
+        n = eng._reload_prefix(ctx)
+        assert n == 1
+        assert all(node.device_page is not None for node in chain)
+        # every refcount taken during the reload was released again
+        assert all(node.refcount == 0 for node in chain)
+
+
+class TestOpsInterpretDispatch:
+    """REPRO_KERNEL_INTERPRET=1 must route the off-TPU dispatch through the
+    Pallas kernels in interpret mode — the CI kernel-parity job's contract
+    (without it the `tpu` branch of kernels/*/ops.py is dead code on CPU)."""
+
+    def test_paged_attention_ops_interpret(self, monkeypatch):
+        from repro.kernels.paged_attention import ops
+        from repro.kernels.paged_attention.ref import paged_attention_ref
+
+        rng = np.random.default_rng(3)
+        B, H, KH, D, T, P = 2, 4, 2, 64, 8, 3
+        q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B * P, T, KH, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B * P, T, KH, D)), jnp.float32)
+        tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+        lengths = jnp.asarray([T * P, T + 3], jnp.int32)
+        monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+        out = ops.paged_attention(q, k, v, tables, lengths, softcap=30.0, window=10)
+        ref = paged_attention_ref(q, k, v, tables, lengths, softcap=30.0, window=10)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+    def test_flash_attention_ops_interpret(self, monkeypatch):
+        from repro.kernels.flash_attention import ops
+        from repro.kernels.flash_attention.ref import flash_attention_ref
+
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.standard_normal((1, 4, 64, 32)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+        monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+        out = ops.flash_attention(q, k, v, causal=True, window=24)
+        ref = flash_attention_ref(q, k, v, causal=True, window=24)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+    def test_ssd_ops_interpret(self, monkeypatch):
+        import jax
+
+        from repro.kernels.ssd import ops
+        from repro.kernels.ssd.ref import ssd_reference
+
+        rng = np.random.default_rng(5)
+        b, s, h, p, n, chunk = 1, 32, 2, 8, 8, 8
+        x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+        dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, s, h)), jnp.float32))
+        A = -jnp.abs(jnp.asarray(rng.standard_normal((h,)), jnp.float32))
+        B = jnp.asarray(rng.standard_normal((b, s, 1, n)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, s, 1, n)), jnp.float32)
+        monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+        yk, sk = ops.ssd(x, dt, A, B, C, chunk=chunk)
+        yr, sr = ssd_reference(x, dt, A, B, C, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-2, atol=1e-2)
+
+    def test_engine_decode_through_interpreted_kernel(self, setup, monkeypatch):
+        """End-to-end seam: a block-table engine whose decode runs the
+        *interpreted Pallas kernel* (not the jnp oracle) produces the same
+        tokens — the serving path itself is kernel-clean."""
+        cfg, _, params = setup
+        oracle = make_engine(cfg, params, max_slots=1)
+        ctx = list(range(2, 30))
+        oracle.submit(EngineRequest("p", ctx, max_new_tokens=3))
+        want = oracle.run_to_completion()[0].output_tokens
+        monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+        eng = make_engine(cfg, params, max_slots=1)
+        eng.submit(EngineRequest("p", ctx, max_new_tokens=3))
+        got = eng.run_to_completion()[0].output_tokens
+        assert got == want

@@ -56,6 +56,10 @@ class SMGScheduler(AgentScheduler):
     def _on_tick(self, now: float) -> None:
         self._admit(now)
 
+    def _on_slot_freed(self, replica: int, now: float) -> None:
+        del replica
+        self._admit(now)
+
     # ----------------------------------------------------------- admission
     def _admit(self, now: float) -> None:
         still_gated: list[str] = []
@@ -103,6 +107,8 @@ class SMGScheduler(AgentScheduler):
             self._emit_forward(prog, Tier.WAITING, recompute=True)
         return True
 
+    # _has_slot comes from AgentScheduler (max_running cap / runtime probe)
+
     def _lru_evict(self, rep, need: int, now: float, keep: str | None = None) -> bool:
         """Engine-level LRU: evict least-recently-active non-running KV."""
         victims = sorted(
@@ -123,10 +129,6 @@ class SMGScheduler(AgentScheduler):
             self.waiting.add(v)
             v.metrics.evictions += 1
         return freed >= need
-
-    def _has_slot(self, replica: int) -> bool:
-        cap = self.config.max_running
-        return cap is None or len(self._running[replica]) < cap
 
 
 class TAScheduler(AgentScheduler):
@@ -164,6 +166,10 @@ class TAScheduler(AgentScheduler):
     def _on_tick(self, now: float) -> None:
         for rep in self.replicas:
             self._shrink_to_fit(rep, now)
+        self._admit(now)
+
+    def _on_slot_freed(self, replica: int, now: float) -> None:
+        del replica
         self._admit(now)
 
     # ----------------------------------------------------------- policies
@@ -241,10 +247,6 @@ class TAScheduler(AgentScheduler):
 
     def _try_reload(self, rep, prog: ProgramState) -> bool:
         return False  # TA has no CPU tier
-
-    def _has_slot(self, replica: int) -> bool:
-        cap = self.config.max_running
-        return cap is None or len(self._running[replica]) < cap
 
 
 class TAOScheduler(TAScheduler):

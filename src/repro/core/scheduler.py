@@ -85,6 +85,13 @@ class AgentScheduler(abc.ABC):
         self._staged: list[Action] = []
         self._next_action_id = 1
         self._now = 0.0
+        # optional runtime occupancy probe: replica -> (free_slots, live
+        # slots) read straight from the engine. When attached (the real
+        # router's decode pump), _has_slot/running_count reflect *actual*
+        # engine batch occupancy instead of the scheduler's shadow
+        # bookkeeping; when absent (simulator, serial replay) behavior is
+        # unchanged.
+        self._slot_probe: "object | None" = None
         # programs admitted to the GPU queue whose KV has *not* been moved
         # yet (no free engine slot at admission time): maps pid -> the tier
         # the bytes still physically occupy, so the eventual Forward carries
@@ -148,6 +155,18 @@ class AgentScheduler(abc.ABC):
     def _on_transfer_complete(self, rec: TransferRecord, now: float) -> None:
         """Policy hook: the transfer behind ``rec`` has fully landed."""
 
+    def on_slot_freed(self, replica: int, now: float) -> PlacementPlan:
+        """Runtime notification that an engine decode slot freed mid-batch
+        (a resident program finished its step while others keep decoding).
+        Policies use the hook to forward gated work into the freed slot
+        immediately instead of waiting for the next tick."""
+        self._now = now
+        self._on_slot_freed(replica, now)
+        return self._drain(now)
+
+    def _on_slot_freed(self, replica: int, now: float) -> None:
+        """Policy hook: a decode slot on ``replica`` is free again."""
+
     @abc.abstractmethod
     def _on_request_arrived(self, pid: str, input_tokens: int, now: float) -> None:
         ...
@@ -193,8 +212,35 @@ class AgentScheduler(abc.ABC):
         prog = self.programs.get(pid)
         return prog.replica if prog else None
 
+    def attach_slot_probe(self, probe) -> None:
+        """Install ``probe(replica) -> (free_slots, live_slots)`` so slot
+        gating and ``running_count`` read real engine occupancy. Pass
+        ``None`` to detach and fall back to shadow bookkeeping."""
+        self._slot_probe = probe
+
     def running_count(self, replica: int) -> int:
+        if self._slot_probe is not None:
+            return self._slot_probe(replica)[1]
         return len(self._running[replica])
+
+    def _has_slot(self, replica: int | None) -> bool:
+        """Can ``replica`` take one more forwarded request right now?
+
+        With a slot probe attached the answer is the engine's own free-slot
+        count (minus requests already released but not yet submitted — the
+        probe owner accounts for those); otherwise the optional
+        ``max_running`` cap against the shadow running set, and unbounded
+        when no cap is configured (the pre-probe behavior every scheduler
+        shared)."""
+        if replica is None:
+            return False
+        cap = self.config.max_running
+        if cap is not None and self.running_count(replica) >= cap:
+            return False
+        if self._slot_probe is not None:
+            free, _ = self._slot_probe(replica)
+            return free > 0
+        return True
 
     # ----------------------------------------------------------- emission
     def _drain(self, now: float) -> PlacementPlan:
@@ -335,6 +381,13 @@ class MoriScheduler(AgentScheduler):
         if self.config.migrate_on_pressure:
             self._migrate_pass(now)
         self._sync_labels()
+
+    def _on_slot_freed(self, replica: int, now: float) -> None:
+        """A decode slot opened mid-batch: run the promotion/forward pass so
+        a gated program claims it immediately — the batch dimension never
+        idles waiting for the next control tick."""
+        del replica  # the promote pass is global and affinity-aware
+        self._promote_pass(now)
 
     def _on_transfer_complete(self, rec: TransferRecord, now: float) -> None:
         """A migrate ack means the program's DRAM copy now physically
@@ -724,12 +777,6 @@ class MoriScheduler(AgentScheduler):
                 # forward KV that has not landed on the destination
 
     # ------------------------------------------------------------ dispatch
-    def _has_slot(self, replica: int | None) -> bool:
-        if replica is None:
-            return False
-        cap = self.config.max_running
-        return cap is None or len(self._running[replica]) < cap
-
     def _dispatch(self, prog: ProgramState) -> None:
         """Forward a GPU-queue program, sourcing the KV from wherever it
         physically still lives (a deferred promotion keeps its true source

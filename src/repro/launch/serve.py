@@ -35,6 +35,9 @@ def main() -> None:
     ap.add_argument("--cpu-pages", type=int, default=20)
     ap.add_argument("--snapshot", default="")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--serial-decode", action="store_true",
+                    help="pre-pump compatibility mode: run each request "
+                         "to completion instead of batched decode")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -54,6 +57,7 @@ def main() -> None:
         gpu_capacity_bytes=engines[0].pool.page_bytes * args.gpu_pages,
         cpu_capacity_bytes=engines[0].pool.page_bytes * args.cpu_pages,
         config=SchedulerConfig(tick_interval_s=1.0),
+        serial_decode=args.serial_decode,
     )
     if args.resume and args.snapshot and Path(args.snapshot).exists():
         counters = restore_snapshot(router, args.snapshot)
@@ -74,6 +78,10 @@ def main() -> None:
     print(f"steps {m.steps_completed}  tokens {m.tokens_generated}  "
           f"hit {m.cache_hit_rate:.1%}  offl {m.offloaded_pages}  "
           f"reload {m.reloaded_pages}  gated {m.gated_events}")
+    print(f"decode dispatches {m.pump_steps}  batch occupancy "
+          f"{m.mean_batch_occupancy:.2f} (peak {m.peak_live_slots})  "
+          f"slot wait {m.slot_wait_s:.1f}s  overlap steps "
+          f"{m.overlap_decode_steps}")
     if args.snapshot:
         save_snapshot(router, args.snapshot)
         print(f"control plane snapshot -> {args.snapshot}")

@@ -146,6 +146,11 @@ class Engine:
         self.tree = TypedRadixTree(page_tokens)
         self.lengths = np.zeros(max_slots, np.int32)
         self.last_token = np.zeros(max_slots, np.int32)
+        # token whose KV currently occupies position lengths[sid]-1 — what a
+        # step NOT advancing this slot must re-feed so its row's write is an
+        # idempotent rewrite of the existing tail KV (last_token's KV is not
+        # written yet; feeding it unpaced would corrupt the tail position)
+        self._tail_token = np.zeros(max_slots, np.int32)
         self.slots: dict[int, _Slot] = {}
         self._free_slots = list(range(max_slots))
         if dense_slots:
@@ -168,6 +173,11 @@ class Engine:
     # ------------------------------------------------------------ admission
     def has_slot(self) -> bool:
         return bool(self._free_slots)
+
+    def free_slot_count(self) -> int:
+        """Decode slots currently available for ``submit`` — the real
+        occupancy signal the scheduler's slot probe reads."""
+        return len(self._free_slots)
 
     def warmup(self) -> None:
         """Precompile every decode-step shape before admitting traffic.
@@ -283,6 +293,7 @@ class Engine:
             self.pool.write_device_pages(new_pages, k_suf, v_suf)
         self.lengths[sid] = length
         self.last_token[sid] = first_token
+        self._tail_token[sid] = req.tokens[-1]  # prefill wrote its KV last
         self.slots[sid] = slot
         return sid
 
@@ -352,14 +363,48 @@ class Engine:
         )
         return jnp.argmax(logits, axis=-1), k_pages, v_pages
 
-    def step(self) -> list[Completion]:
-        """One continuous-batching decode step across all active slots."""
+    def step(self, active: "list[int] | None" = None) -> list[Completion]:
+        """One continuous-batching decode step across the active slots.
+
+        ``active`` selects which resident slots advance this step (default:
+        all of them) — the router's decode pump uses it to pace each slot on
+        its own virtual-time deadline while still issuing ONE batched decode
+        call. Masked slots stay in the batch but their state is untouched:
+        their lengths are not bumped and their row re-feeds the token whose
+        KV already occupies the tail position (``_tail_token``), so the
+        kernel's write is an idempotent rewrite of existing KV and the
+        sampled token for those rows is discarded. Active rows are computed
+        independently per batch row, so their tokens are identical whether
+        the masked rows are present or not.
+
+        Submitting a new request between steps is safe while other slots are
+        mid-decode: the jitted decode donates the pool arrays, but
+        ``pool.adopt`` reinstates the committed buffers before ``step``
+        returns, so ``submit``'s pool reads/writes never see a donated
+        (invalidated) buffer and its freshly-written pages are disjoint from
+        every live block table.
+        """
         if not self.slots:
             return []
+        if active is None:
+            active_ids = list(self.slots)
+        else:
+            active_ids = [sid for sid in active if sid in self.slots]
+            if not active_ids:
+                return []
         self.steps += 1
+        active_set = set(active_ids)
+        toks_np = self.last_token.copy()
         for sid in self.slots:
-            self.lengths[sid] += 1  # the token being decoded extends the ctx
-        toks = jnp.asarray(self.last_token, jnp.int32)
+            if sid in active_set:
+                # this step writes last_token's KV at the new tail position
+                self._tail_token[sid] = self.last_token[sid]
+                self.lengths[sid] += 1  # the decoded token extends the ctx
+            else:
+                # masked: rewrite the existing tail KV instead of clobbering
+                # it with the (not-yet-written) last token's
+                toks_np[sid] = self._tail_token[sid]
+        toks = jnp.asarray(toks_np, jnp.int32)
         lens = jnp.asarray(np.maximum(self.lengths, 1), jnp.int32)
         if self.dense_slots:
             next_tok, self.slot_k, self.slot_v = self._decode_fn(
@@ -370,6 +415,8 @@ class Engine:
         next_tok = np.asarray(next_tok)
         done: list[Completion] = []
         for sid, slot in list(self.slots.items()):
+            if sid not in active_set:
+                continue
             slot.length = int(self.lengths[sid])
             tok = int(next_tok[sid])
             slot.produced.append(tok)
@@ -377,6 +424,20 @@ class Engine:
             if len(slot.produced) >= slot.request.max_new_tokens:
                 done.append(self._finish(slot))
         return done
+
+    def slot_progress(self) -> dict[int, tuple[str, int, int]]:
+        """Per-slot decode progress: ``{slot_id: (pid, produced, budget)}``.
+        Introspection for tests and operators (the pump paces decode from
+        its own virtual-clock deadlines; this is the engine-truth view to
+        check that bookkeeping against)."""
+        return {
+            sid: (
+                slot.request.program_id,
+                len(slot.produced),
+                slot.request.max_new_tokens,
+            )
+            for sid, slot in self.slots.items()
+        }
 
     def _paged_step(self, toks, lens):
         """Block-table decode: append KV to tail pages, attend via tables."""

@@ -9,6 +9,23 @@ advances it by the trace's recorded reasoning wall-time) while the engine
 compute itself is real JAX execution — so policy behaviour is timed
 faithfully and the data plane actually runs.
 
+Replay executes decode through a clocked **decode pump**: every replica
+holds a queue of resident program slots, and at each virtual-clock quantum
+every replica with due slots takes ONE batched ``Engine.step`` that
+advances all of them together. New ``Forward``s submit into free engine
+slots while other slots are mid-decode, each program's decode steps are
+paced across its own recorded ``reasoning_wall_s`` window (a slow program
+never monopolizes the replica), completions retire per-slot when their
+window ends, and transfer-plane chunks interleave with pump steps — so
+the measured compute/transfer overlap is against genuinely batched
+decode. The scheduler reads *real* engine occupancy through its slot
+probe and is poked via ``on_slot_freed`` the moment a batch slot opens,
+so gated programs join a running batch mid-flight.
+``MoriRouter(serial_decode=True)`` keeps the pre-pump serialized
+replay — each dispatched request runs to completion before the next
+event — pinned token-identical by ``tests/test_decode_pump.py``'s golden
+corpus.
+
 Transfers execute in one of two modes:
 
 * **async (default)** — an ``Offload`` or reloading ``Forward`` becomes a
@@ -27,9 +44,9 @@ Transfers execute in one of two modes:
   overlap, measured on the real path.
 * **sync (``sync_transfers=True``)** — the pre-async compatibility mode:
   every transfer-bearing action executes and acks inside ``apply_plan``,
-  keeping the ledger empty between events. This mode reproduces the
-  golden byte-identical sim↔router action streams of
-  ``tests/test_plan_protocol.py``.
+  keeping the ledger empty between events. Together with
+  ``serial_decode=True`` this reproduces the golden byte-identical
+  sim↔router action streams of ``tests/test_plan_protocol.py``.
 
 Action semantics on the real path:
 
@@ -46,7 +63,8 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, field
 
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
 from repro.core.actions import (
@@ -61,8 +79,14 @@ from repro.core.actions import (
 )
 from repro.core.transfers import CopyJob
 from repro.core.types import ProgramTrace, Tier, TransferCost
-from repro.serving.engine import Engine, EngineRequest
+from repro.serving.engine import Completion, Engine, EngineRequest
 from repro.serving.transfer_plane import ReplicaTransferPlane
+
+#: float slack for virtual-clock due/retire comparisons
+_EPS = 1e-9
+#: smallest synthesized context the replay will accept after reserving
+#: per-step headroom — below this the trace cannot express prefix growth
+_MIN_SYNTH_CTX = 16
 
 
 @dataclass
@@ -81,11 +105,58 @@ class RouterMetrics:
     cancelled_offloads: int = 0      # offloads aborted by early tool return
     cancelled_pages: int = 0         # staged pages rolled back by aborts
     peak_inflight_bytes: int = 0     # high-water mark of the transfer ledger
+    # decode pump (batch occupancy; serial_decode replay pins these at one
+    # live slot per step by construction)
+    pump_steps: int = 0              # batched decode steps taken by replay
+    sum_live_slots: int = 0          # Σ slots advanced across pump steps
+    peak_live_slots: int = 0         # most slots one step ever advanced
+    multi_slot_steps: int = 0        # steps that advanced ≥ 2 slots
+    slot_wait_s: float = 0.0         # Forward release → engine-submit wait
+    slot_waits: int = 0              # submits that waited on a full batch
 
     @property
     def cache_hit_rate(self) -> float:
         total = self.cached_tokens + self.prefilled_tokens
         return self.cached_tokens / total if total else 0.0
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        """Mean live slots advanced per decode step (the continuous-batching
+        payoff: > 1.0 means programs genuinely decoded together)."""
+        return self.sum_live_slots / self.pump_steps if self.pump_steps else 0.0
+
+
+@dataclass
+class _PumpSlot:
+    """One resident program in a replica's decode batch."""
+
+    pid: str
+    replica: int
+    engine_slot: int
+    req: EngineRequest
+    step_idx: int
+    start: float                 # virtual submit time
+    wall: float                  # recorded reasoning_wall_s for this step
+    dt: float                    # virtual seconds between decode steps
+    seq: int                     # join order, for deterministic iteration
+    steps_taken: int = 0
+    next_due: float = 0.0
+    done: Completion | None = None
+
+    @property
+    def end(self) -> float:
+        return self.start + self.wall
+
+
+@dataclass
+class _ReplayState:
+    """Replay-scoped context shared by issue/submit/retire."""
+
+    rng: object
+    state: dict[str, dict]
+    vocab_size: int
+    max_new_tokens: int
+    traces: list[ProgramTrace] = field(default_factory=list)
 
 
 class MoriRouter:
@@ -102,6 +173,8 @@ class MoriRouter:
         config: SchedulerConfig | None = None,
         record_plans: bool = False,
         sync_transfers: bool = False,
+        serial_decode: bool = False,
+        pump_quantum_s: float | None = None,
         xfer_cost: TransferCost | None = None,
         hw: "object | None" = None,   # repro.sim.hardware.HwConfig
     ):
@@ -143,6 +216,19 @@ class MoriRouter:
         self.output_log: dict[str, list[int]] = {}
         self._pending: dict[str, tuple[EngineRequest, int]] = {}
         self._dispatched: dict[str, Forward] = {}
+        self._dispatch_time: dict[str, float] = {}
+
+        self.serial_decode = serial_decode
+        self.pump_quantum_s = pump_quantum_s
+        # per-replica decode batches (pid -> _PumpSlot); always empty in
+        # serial_decode mode
+        self._pump_slots: list[dict[str, _PumpSlot]] = [{} for _ in engines]
+        self._slot_seq = itertools.count()
+        if not serial_decode:
+            # the scheduler's slot gate reads real engine occupancy (minus
+            # requests released but not yet submitted) instead of its own
+            # shadow running set
+            self.sched.attach_slot_probe(self._probe_slots)
 
         self.sync_transfers = sync_transfers
         if xfer_cost is None:
@@ -157,6 +243,7 @@ class MoriRouter:
         # set only while replay() runs; without a virtual clock (direct
         # apply_plan use) transfers fall back to synchronous execution
         self._push = None
+        self._rs: _ReplayState | None = None
         self.planes: list[ReplicaTransferPlane] = [
             ReplicaTransferPlane(
                 i, eng, xfer_cost,
@@ -172,8 +259,9 @@ class MoriRouter:
         return not self.sync_transfers and self._push is not None
 
     def _wake(self, eta: float) -> None:
-        """A plane scheduled a chunk at ``eta``: make sure the replay loop
-        visits that timestamp even if no trace event falls on it."""
+        """A plane or pump slot scheduled work at ``eta``: make sure the
+        replay loop visits that timestamp even if no trace event falls on
+        it (the drain after every event runs the pump/planes)."""
         if self._push is not None:
             self._push(eta, lambda t: None)
 
@@ -183,6 +271,22 @@ class MoriRouter:
 
     def _planes_busy(self) -> bool:
         return any(p.in_flight() for p in self.planes)
+
+    def _probe_slots(self, replica: int) -> tuple[int, int]:
+        """Scheduler slot probe: (free, live) decode slots on ``replica``.
+
+        Requests the scheduler already released but the pump has not yet
+        submitted count against the free side (they own a slot the moment
+        one opens) and toward the live side, so the gate can never
+        over-release into a batch that is already spoken for.
+        """
+        queued = sum(
+            1
+            for pid, act in self._dispatched.items()
+            if act.replica == replica and pid in self._pending
+        )
+        free = self.engines[replica].free_slot_count()
+        return max(0, free - queued), len(self._pump_slots[replica]) + queued
 
     # ------------------------------------------------------- plan executor
     def apply_plan(self, plan: PlacementPlan) -> None:
@@ -250,6 +354,7 @@ class MoriRouter:
             eng.discard_program(act.pid, Tier.CPU)
             self.metrics.recompute_submits += 1
         self._dispatched[act.pid] = act
+        self._dispatch_time[act.pid] = now
 
     def _exec_offload(self, act: Offload, now: float) -> None:
         if self._async and act.nbytes > 0:
@@ -283,6 +388,7 @@ class MoriRouter:
             else:
                 self.metrics.reloaded_pages += pages
             self._dispatched[act.pid] = act
+            self._dispatch_time[act.pid] = now
         self._ack(job.pid, job.action_id, now)
 
     def _ack(self, pid: str, action_id: int, now: float) -> None:
@@ -297,171 +403,451 @@ class MoriRouter:
         max_new_tokens: int = 8,
         seed: int = 0,
     ) -> RouterMetrics:
-        """Replay traces concurrently on the virtual clock."""
+        """Replay traces concurrently on the virtual clock.
+
+        Default mode runs the clocked decode pump (batched multi-program
+        decode); ``serial_decode=True`` reproduces the pre-pump serialized
+        order, running each dispatched request to completion before the
+        next event.
+        """
         import random
 
         rng = random.Random(seed)
         q: list[tuple[float, int, object]] = []
         seq = itertools.count()
-        state: dict[str, dict] = {}
 
         def push(t, fn):
             heapq.heappush(q, (t, next(seq), fn))
 
         self._push = push
 
-        def issue(pid: str, step_idx: int, now: float):
-            st = state[pid]
-            trace: ProgramTrace = st["trace"]
-            rec = trace.steps[step_idx]
-            # synthesize a token context of the recorded length (prefix-stable)
-            want = max(
-                st["ctx_len"] + 1,
-                min(rec.input_tokens // st["scale"], st["max_ctx"]),
-            )
-            grow = want - st["ctx_len"]
-            st["tokens"].extend(
-                rng.randrange(2, vocab_size) for _ in range(grow)
-            )
-            st["ctx_len"] = want
-            req = EngineRequest(
-                program_id=pid,
-                tokens=list(st["tokens"]),
-                max_new_tokens=max_new_tokens,
-            )
-            self._pending[pid] = (req, step_idx)
-            self.apply_plan(self.sched.request_arrived(pid, want, now))
-            if pid not in self._dispatched:
-                self.metrics.gated_events += 1
-
-        def run_decode(eng, replica: int, pid: str, req, wall_s: float, now: float):
-            """Run the submitted request to completion. In async mode the
-            decode steps spread over the virtual window [now, now+wall] and
-            the transfer planes advance between steps — a copy chunk lands
-            *during* decode exactly as the paper's overlap requires."""
-            if not self._async:
-                return eng.run_to_completion()
-            n_est = max(1, req.max_new_tokens - 1)
-            dt = wall_s / n_est if wall_s > 0 else 0.0
-            t, done = now, []
-            for _ in range(20_000):
-                busy = self.planes[replica].in_flight()
-                done.extend(eng.step())
-                if busy:
-                    self.metrics.overlap_decode_steps += 1
-                t = min(now + wall_s, t + dt)
-                self._advance_planes(t)
-                if any(c.program_id == pid for c in done):
-                    return done
-            raise RuntimeError("decode did not complete")
-
-        def finish_step(pid: str, now: float):
-            st = state[pid]
-            req, step_idx = self._pending.pop(pid)
-            act = self._dispatched.pop(pid)
-            eng = self.engines[act.replica]
-            eng.submit(req)
-            self.sched.notify_inference_started(pid, now)
-            trace: ProgramTrace = st["trace"]
-            rec = trace.steps[step_idx]
-            done = run_decode(eng, act.replica, pid, req, rec.reasoning_wall_s, now)
-            comp = next(c for c in done if c.program_id == pid)
-            self.metrics.steps_completed += 1
-            self.metrics.tokens_generated += len(comp.output_tokens)
-            self.metrics.cached_tokens += comp.cached_tokens
-            self.metrics.prefilled_tokens += comp.prefilled_tokens
-            self.output_log.setdefault(pid, []).extend(comp.output_tokens)
-            st["tokens"].extend(comp.output_tokens[:-1])
-            st["ctx_len"] = len(st["tokens"])
-            end = now + rec.reasoning_wall_s
-            if self._async:
-                self._advance_planes(end)
-            self.apply_plan(
-                self.sched.request_completed(pid, len(comp.output_tokens), end)
-            )
-            nxt = step_idx + 1
-            if nxt < len(trace.steps) and nxt < st["max_steps"]:
-                push(end + rec.tool_duration_s, lambda t, p=pid, n=nxt: issue(p, n, t))
-            else:
-                self.apply_plan(self.sched.program_finished(pid, end))
-
-        # register programs
+        # register programs (validating that each trace's synthesized
+        # context can grow for its whole lifetime without hitting max_seq)
         max_seq = self.engines[0].max_seq
+        state: dict[str, dict] = {}
         for tr in traces:
             pid = tr.program_id
             scale = max(1, tr.steps[0].input_tokens // 48)
+            reserved = (max_new_tokens + 2) * len(tr.steps) + 8
+            max_ctx = max_seq - reserved
+            if max_ctx < _MIN_SYNTH_CTX:
+                raise ValueError(
+                    f"trace {pid!r} cannot replay on this engine: "
+                    f"{len(tr.steps)} steps reserve "
+                    f"(max_new_tokens={max_new_tokens} + 2) * steps + 8 = "
+                    f"{reserved} tokens of growth headroom, but "
+                    f"max_seq={max_seq} leaves max_ctx={max_ctx} "
+                    f"(< {_MIN_SYNTH_CTX}) for the synthesized context — "
+                    "shorten the trace, lower max_new_tokens, or raise the "
+                    "engine's max_seq"
+                )
             state[pid] = {
                 "trace": tr,
                 "tokens": [],
                 "ctx_len": 0,
                 "scale": scale,
-                "max_ctx": max_seq - (max_new_tokens + 2) * len(tr.steps) - 8,
+                "max_ctx": max_ctx,
                 "max_steps": len(tr.steps),
+                "completed_steps": 0,
             }
             self.sched.program_arrived(pid, self.kv_bytes_per_token, 0.0)
-            push(0.0, lambda t, p=pid: issue(p, 0, t))
+            push(0.0, lambda t, p=pid: self._issue(p, 0, t))
 
-        def drain(now: float) -> None:
-            """Execute any requests the scheduler has released to an engine."""
-            progress = True
-            while progress:
-                progress = False
-                for pid in list(self._pending):
-                    if pid in self._dispatched:
-                        finish_step(pid, now)
-                        progress = True
+        self._rs = _ReplayState(
+            rng=rng, state=state, vocab_size=vocab_size,
+            max_new_tokens=max_new_tokens, traces=list(traces),
+        )
+        drain = self._drain_serial if self.serial_decode else self._pump_all
+
+        def can_step(t: float) -> bool:
+            """Step only when no other event shares this virtual instant —
+            same-time admissions then batch into one decode step."""
+            return not (q and q[0][0] <= t + _EPS)
 
         tick = self.sched.config.tick_interval_s
         next_tick = tick
         now = 0.0
-        guard = 0
-        while q:
-            guard += 1
-            if guard > 200_000:
-                raise RuntimeError("router replay did not terminate")
+        # stall guard derived from the workload: an event is allowed to make
+        # no progress (stale wakes, gated arrivals already counted) only so
+        # many times in a row before the replay is declared wedged
+        total_steps = sum(len(tr.steps) for tr in traces)
+        stall_cap = max(1_000, 64 * len(traces) + 8 * total_steps)
+        stalled, last_progress = 0, self._progress_vector()
+        # once the trace event heap runs dry with work still outstanding
+        # (requests gated on capacity, transfers mid-stream), the loop
+        # injects drain ticks until everything resolves — bounded by a
+        # deadline derived from the outstanding work itself (remaining
+        # virtual trace time + worst-case transfer time), not a fixed
+        # tick count
+        drain_deadline: float | None = None
+        while q or self._outstanding_work():
+            if not q:
+                if drain_deadline is None:
+                    drain_deadline = (
+                        now + self._drain_budget_s(state) + 32 * tick
+                    )
+                if now > drain_deadline:
+                    raise RuntimeError(
+                        "router replay did not drain by its derived "
+                        f"deadline (t={now:.3f} > {drain_deadline:.3f}); "
+                        + self._stall_report()
+                    )
+                now += tick
+                next_tick = now + tick
+                self._advance_planes(now)
+                self.apply_plan(self.sched.tick(now))
+                drain(now, can_step(now))
+                continue
+            # a live event heap means new work (and new transfers) can
+            # still start: any prior drain deadline is stale, re-derive it
+            # at the next empty-heap episode from the work outstanding then
+            drain_deadline = None
             t, _, fn = heapq.heappop(q)
             now = max(now, t)
             while next_tick <= now:
                 self._advance_planes(next_tick)
                 self.apply_plan(self.sched.tick(next_tick))
-                drain(next_tick)
+                drain(next_tick, can_step(next_tick))
                 next_tick += tick
             self._advance_planes(now)
             fn(now)
-            drain(now)
-        # final drain: keep ticking until nothing is pending anywhere —
-        # including transfers still streaming on the planes
-        for _ in range(512):
-            if not self._pending and not self._planes_busy():
-                break
-            now += tick
-            self._advance_planes(now)
-            self.apply_plan(self.sched.tick(now))
-            drain(now)
-        else:
-            raise RuntimeError(
-                "router replay did not drain: requests or transfers still "
-                "pending after 512 final ticks (transfer slower than "
-                "512 x tick_interval_s?)"
-            )
+            drain(now, can_step(now))
+            cur = self._progress_vector()
+            if cur == last_progress:
+                stalled += 1
+                if stalled > stall_cap:
+                    raise RuntimeError(
+                        f"router replay stalled: {stall_cap} consecutive "
+                        f"events without progress at t={now:.3f}; "
+                        + self._stall_report()
+                    )
+            else:
+                stalled, last_progress = 0, cur
         self._push = None
+        self._rs = None
         return self.metrics
+
+    # --------------------------------------------------- replay event hooks
+    def _issue(self, pid: str, step_idx: int, now: float) -> None:
+        rs = self._rs
+        st = rs.state[pid]
+        trace: ProgramTrace = st["trace"]
+        rec = trace.steps[step_idx]
+        # synthesize a token context of the recorded length (prefix-stable)
+        want = max(
+            st["ctx_len"] + 1,
+            min(rec.input_tokens // st["scale"], st["max_ctx"]),
+        )
+        grow = want - st["ctx_len"]
+        st["tokens"].extend(
+            rs.rng.randrange(2, rs.vocab_size) for _ in range(grow)
+        )
+        st["ctx_len"] = want
+        req = EngineRequest(
+            program_id=pid,
+            tokens=list(st["tokens"]),
+            max_new_tokens=rs.max_new_tokens,
+        )
+        self._pending[pid] = (req, step_idx)
+        self.apply_plan(self.sched.request_arrived(pid, want, now))
+        if pid not in self._dispatched:
+            self.metrics.gated_events += 1
+
+    def _complete_step(
+        self, pid: str, step_idx: int, comp: Completion, end: float
+    ) -> None:
+        """Shared retire bookkeeping: metrics, context growth, the
+        ``request_completed`` plan, and the next issue (or teardown)."""
+        rs = self._rs
+        st = rs.state[pid]
+        self.metrics.steps_completed += 1
+        self.metrics.tokens_generated += len(comp.output_tokens)
+        self.metrics.cached_tokens += comp.cached_tokens
+        self.metrics.prefilled_tokens += comp.prefilled_tokens
+        self.output_log.setdefault(pid, []).extend(comp.output_tokens)
+        st["tokens"].extend(comp.output_tokens[:-1])
+        st["ctx_len"] = len(st["tokens"])
+        st["completed_steps"] = step_idx + 1
+        trace: ProgramTrace = st["trace"]
+        rec = trace.steps[step_idx]
+        self.apply_plan(
+            self.sched.request_completed(pid, len(comp.output_tokens), end)
+        )
+        nxt = step_idx + 1
+        if nxt < len(trace.steps) and nxt < st["max_steps"]:
+            self._push(
+                end + rec.tool_duration_s,
+                lambda t, p=pid, n=nxt: self._issue(p, n, t),
+            )
+        else:
+            self.apply_plan(self.sched.program_finished(pid, end))
+
+    # ------------------------------------------------------ serialized mode
+    def _drain_serial(self, now: float, allow_step: bool = True) -> None:
+        """Pre-pump compatibility drain: run each released request to
+        completion before touching the next event (``allow_step`` is a
+        pump-signature stand-in; serialized replay never defers)."""
+        del allow_step
+        progress = True
+        while progress:
+            progress = False
+            for pid in list(self._pending):
+                if pid in self._dispatched:
+                    self._finish_step_serial(pid, now)
+                    progress = True
+
+    def _finish_step_serial(self, pid: str, now: float) -> None:
+        rs = self._rs
+        st = rs.state[pid]
+        req, step_idx = self._pending.pop(pid)
+        act = self._dispatched.pop(pid)
+        self._dispatch_time.pop(pid, None)
+        eng = self.engines[act.replica]
+        eng.submit(req)
+        self.sched.notify_inference_started(pid, now)
+        trace: ProgramTrace = st["trace"]
+        rec = trace.steps[step_idx]
+        before = eng.steps
+        done = self._run_decode_serial(
+            eng, act.replica, pid, req, rec.reasoning_wall_s, now
+        )
+        delta = eng.steps - before
+        m = self.metrics
+        m.pump_steps += delta
+        m.sum_live_slots += delta     # serialized: one live slot per step
+        if delta:
+            m.peak_live_slots = max(m.peak_live_slots, 1)
+        comp = next(c for c in done if c.program_id == pid)
+        end = now + rec.reasoning_wall_s
+        if self._async:
+            self._advance_planes(end)
+        self._complete_step(pid, step_idx, comp, end)
+
+    def _run_decode_serial(
+        self, eng, replica: int, pid: str, req, wall_s: float, now: float
+    ):
+        """Run the submitted request to completion. In async mode the
+        decode steps spread over the virtual window [now, now+wall] and
+        the transfer planes advance between steps — a copy chunk lands
+        *during* decode exactly as the paper's overlap requires."""
+        if not self._async:
+            return eng.run_to_completion()
+        n_est = max(1, req.max_new_tokens - 1)
+        dt = wall_s / n_est if wall_s > 0 else 0.0
+        t, done = now, []
+        for _ in range(20_000):
+            busy = self.planes[replica].in_flight()
+            done.extend(eng.step())
+            if busy:
+                self.metrics.overlap_decode_steps += 1
+            t = min(now + wall_s, t + dt)
+            self._advance_planes(t)
+            if any(c.program_id == pid for c in done):
+                return done
+        raise RuntimeError("decode did not complete")
+
+    # --------------------------------------------------------- decode pump
+    def _pump_all(self, now: float, allow_step: bool = True) -> None:
+        """Advance every replica's decode batch at virtual time ``now``
+        until the whole system settles (retires can release slots that
+        admit gated programs on other replicas, so iterate to fixpoint).
+
+        ``allow_step=False`` defers decode steps while another event at
+        the same virtual instant is still pending in the replay heap —
+        programs admitted by *separate* same-time events then share one
+        batched step at the instant's final visit (the wake pushed at
+        submit time guarantees that visit happens) instead of each
+        stepping solo as its admission event drains. Retires and
+        admissions always run; only stepping waits.
+        """
+        for _ in range(100_000):
+            progress = False
+            for r in range(len(self.engines)):
+                progress |= self._pump_replica(r, now, allow_step)
+            if not progress:
+                return
+        raise RuntimeError(
+            f"decode pump did not settle at t={now:.3f}; "
+            + self._stall_report()
+        )
+
+    def _pump_replica(self, r: int, now: float, allow_step: bool = True) -> bool:
+        eng = self.engines[r]
+        slots = self._pump_slots[r]
+        acted = False
+
+        # 1. retire slots whose virtual reasoning window has ended —
+        #    deterministic order: window end, then batch-join sequence
+        ready = sorted(
+            (s for s in slots.values()
+             if s.done is not None and s.end <= now + _EPS),
+            key=lambda s: (s.end, s.seq),
+        )
+        for slot in ready:
+            slots.pop(slot.pid, None)
+            self._complete_step(slot.pid, slot.step_idx, slot.done, slot.end)
+            acted = True
+
+        # 2. admit released requests into free engine slots (release order)
+        #    while other slots keep decoding — continuous batching's join
+        for pid in list(self._dispatched):
+            if pid not in self._pending:
+                continue
+            act = self._dispatched[pid]
+            if act.replica != r:
+                continue
+            if eng.free_slot_count() <= 0:
+                break
+            self._submit_into_slot(pid, r, now)
+            acted = True
+
+        # 3. one batched decode step advancing every due slot together
+        if not allow_step:
+            return acted
+        due = sorted(
+            (s for s in slots.values()
+             if s.done is None and s.next_due <= now + _EPS),
+            key=lambda s: s.seq,
+        )
+        if due:
+            busy = self.planes[r].in_flight()
+            completions = eng.step(active=[s.engine_slot for s in due])
+            m = self.metrics
+            m.pump_steps += 1
+            m.sum_live_slots += len(due)
+            m.peak_live_slots = max(m.peak_live_slots, len(due))
+            if len(due) >= 2:
+                m.multi_slot_steps += 1
+            if busy:
+                m.overlap_decode_steps += 1
+            for s in due:
+                s.steps_taken += 1
+                if s.dt > 0:
+                    s.next_due = self._quantize(
+                        s.start + s.steps_taken * s.dt, s.end
+                    )
+                    if s.next_due > now + _EPS:
+                        self._wake(s.next_due)
+                # dt == 0 (zero recorded wall): keep stepping this quantum
+                # until the engine finishes the request
+            freed = False
+            for comp in completions:
+                s = slots.get(comp.program_id)
+                if s is not None and s.done is None:
+                    s.done = comp
+                    freed = True
+                    if s.end > now + _EPS:
+                        self._wake(s.end)
+            if freed:
+                # the engine slot opened mid-batch: let the scheduler
+                # forward gated work into it right now, not at next tick
+                self.apply_plan(self.sched.on_slot_freed(r, now))
+            acted = True
+        return acted
+
+    def _submit_into_slot(self, pid: str, r: int, now: float) -> None:
+        rs = self._rs
+        req, step_idx = self._pending.pop(pid)
+        self._dispatched.pop(pid)
+        sid = self.engines[r].submit(req)
+        self.sched.notify_inference_started(pid, now)
+        rec = rs.state[pid]["trace"].steps[step_idx]
+        wall = rec.reasoning_wall_s
+        n_est = max(1, req.max_new_tokens - 1)
+        dt = wall / n_est if wall > 0 else 0.0
+        self._pump_slots[r][pid] = _PumpSlot(
+            pid=pid, replica=r, engine_slot=sid, req=req, step_idx=step_idx,
+            start=now, wall=wall, dt=dt, seq=next(self._slot_seq),
+            next_due=now,
+        )
+        # guarantee a final same-instant pump visit: if stepping is being
+        # deferred for same-time batching, this wake is where it happens
+        self._wake(now)
+        released = self._dispatch_time.pop(pid, now)
+        wait = now - released
+        if wait > _EPS:
+            self.metrics.slot_wait_s += wait
+            self.metrics.slot_waits += 1
+
+    def _quantize(self, t: float, end: float) -> float:
+        """Snap a due time up to the pump quantum grid (when configured) so
+        co-resident slots with near-equal pacing share batched steps; never
+        past the slot's window end, so retires stay on schedule."""
+        q = self.pump_quantum_s
+        if not q:
+            return t
+        return min(end, math.ceil(t / q - _EPS) * q)
+
+    # -------------------------------------------------- stall/drain guards
+    def _progress_vector(self) -> tuple:
+        """Monotone counters that move whenever replay does real work."""
+        m = self.metrics
+        return (
+            m.steps_completed, m.tokens_generated, m.pump_steps,
+            m.offloaded_pages, m.reloaded_pages, m.nvme_reloaded_pages,
+            m.cancelled_pages, m.cancelled_offloads, m.gated_events,
+            m.recompute_submits,
+            sum(e.steps for e in self.engines),
+            sum(p.chunks_executed for p in self.planes),
+        )
+
+    def _outstanding_work(self) -> bool:
+        return (
+            bool(self._pending)
+            or bool(self._dispatched)
+            or any(self._pump_slots)
+            or self._planes_busy()
+        )
+
+    def _drain_budget_s(self, state: dict[str, dict]) -> float:
+        """Upper bound on the virtual time the outstanding work needs:
+        every un-replayed trace step's reasoning + tool window, plus the
+        pending transfer bytes over the slowest configured channel."""
+        remaining = 0.0
+        for st in state.values():
+            tr: ProgramTrace = st["trace"]
+            for rec in tr.steps[st["completed_steps"]:]:
+                remaining += rec.reasoning_wall_s + rec.tool_duration_s
+        pend = sum(p.pending_bytes() for p in self.planes)
+        bw = min(
+            self.xfer_cost.pcie_bytes_per_s, self.xfer_cost.ssd_bytes_per_s
+        )
+        xfer_s = (pend / bw + self.xfer_cost.fixed_latency_s) if pend else 0.0
+        return remaining + xfer_s
+
+    def _stall_report(self) -> str:
+        """Name exactly what is still pending (for termination errors)."""
+        parts = []
+        if self._pending:
+            gated = sorted(p for p in self._pending if p not in self._dispatched)
+            if gated:
+                parts.append(f"requests gated by the scheduler: {gated}")
+            released = sorted(p for p in self._pending if p in self._dispatched)
+            if released:
+                parts.append(
+                    f"requests released but awaiting an engine slot: {released}"
+                )
+        for r, slots in enumerate(self._pump_slots):
+            if slots:
+                desc = [
+                    f"{s.pid}(step {s.step_idx}, {s.steps_taken} decode steps,"
+                    f" window ends t={s.end:.3f})"
+                    for s in sorted(slots.values(), key=lambda s: s.seq)
+                ]
+                parts.append(f"replica {r} resident slots: {desc}")
+        for r, plane in enumerate(self.planes):
+            jobs = plane.describe_jobs()
+            if jobs:
+                parts.append(f"replica {r} transfers in flight: {jobs}")
+        return "; ".join(parts) if parts else "no outstanding work recorded"
 
 
 def snapshot_state(router: MoriRouter) -> dict:
-    """Serializable control-plane snapshot (fault tolerance / restart)."""
-    sched = router.sched
-    return {
-        "programs": {
-            pid: {
-                "tier": p.tier.value,
-                "replica": p.replica,
-                "context_tokens": p.context_tokens,
-                "label": p.label.value,
-                "steps_completed": p.steps_completed,
-            }
-            for pid, p in sched.programs.items()
-        },
-        "gpu_used": [r.gpu_used for r in sched.replicas],
-        "cpu_used": [r.cpu_used for r in sched.replicas],
-    }
+    """Serializable control-plane snapshot (fault tolerance / restart).
+
+    Delegates to :func:`repro.serving.state_io.control_plane_state` — the
+    single source of truth for the snapshot schema (program table, per-
+    replica tier usage, live decode-slot occupancy)."""
+    from repro.serving.state_io import control_plane_state
+
+    return control_plane_state(router)

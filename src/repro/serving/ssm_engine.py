@@ -91,6 +91,11 @@ class SsmEngine:
     def has_slot(self) -> bool:
         return True                      # execution is synchronous
 
+    def free_slot_count(self) -> int:
+        """Execution is synchronous inside :meth:`submit`, so a slot is
+        always free — the router's pump probe sees the full budget."""
+        return self.max_slots
+
     def submit(self, req: EngineRequest) -> int:
         self._clock += 1
         pid = req.program_id
@@ -169,7 +174,11 @@ class SsmEngine:
         )
         return self.steps
 
-    def step(self) -> list[Completion]:
+    def step(self, active: "list[int] | None" = None) -> list[Completion]:
+        """Drain completions. ``active`` is accepted for pump-API parity and
+        ignored — :meth:`submit` already ran the whole request, so every
+        stashed completion is final regardless of pacing."""
+        del active
         done, self._completions = self._completions, []
         return done
 

@@ -2,11 +2,15 @@
 
 What must survive a router crash is the *control plane*: the program table
 (tier, replica, context length, idleness window), per-replica tier usage,
-and the typed-radix metadata needed to re-admit programs. KV pages
-themselves are NOT persisted — on restart a program whose pages died with
-the engine re-enters through the Waiting queue and recomputes, which is
-exactly MORI's §4.3.1 semantics (the recompute path doubles as the
-recovery path).
+and — since the decode-pump router — the per-slot batch occupancy at
+snapshot time. KV pages themselves are NOT persisted — on restart a
+program whose pages died with the engine re-enters through the Waiting
+queue and recomputes, which is exactly MORI's §4.3.1 semantics (the
+recompute path doubles as the recovery path).
+
+:func:`control_plane_state` is the single source of truth for the
+snapshot schema; ``repro.serving.router.snapshot_state`` delegates here
+(the two used to serialize overlapping state independently).
 
 Snapshots are atomic (write-temp + os.replace) and versioned; ``restore``
 rebuilds scheduler state onto a (possibly different-sized) replica set —
@@ -20,13 +24,37 @@ from pathlib import Path
 
 from repro.core.types import Tier, TypeLabel
 
-FORMAT_VERSION = 1
+#: v2 adds the per-replica section (tier byte usage + live decode-slot
+#: occupancy); v1 snapshots (program table only) still restore.
+FORMAT_VERSION = 2
 
 
-def save_snapshot(router, path: str | os.PathLike) -> Path:
-    """Atomic JSON snapshot of the router's scheduler state."""
+def control_plane_state(router) -> dict:
+    """The serializable control-plane view of a router: program table,
+    per-replica tier usage, and live decode-slot occupancy."""
     sched = router.sched
-    snap = {
+    replicas = []
+    for rep in sched.replicas:
+        r = rep.replica_id
+        pump = router._pump_slots[r] if r < len(router._pump_slots) else {}
+        replicas.append(
+            {
+                "gpu_used": rep.gpu_used,
+                "cpu_used": rep.cpu_used,
+                "ssd_used": rep.ssd_used,
+                "slots": [
+                    {
+                        "pid": s.pid,
+                        "step_idx": s.step_idx,
+                        "decode_steps_taken": s.steps_taken,
+                        "started_at": s.start,
+                        "window_end": s.end,
+                    }
+                    for s in sorted(pump.values(), key=lambda s: s.seq)
+                ],
+            }
+        )
+    return {
         "version": FORMAT_VERSION,
         "num_replicas": len(sched.replicas),
         "programs": {
@@ -42,7 +70,13 @@ def save_snapshot(router, path: str | os.PathLike) -> Path:
             }
             for pid, p in sched.programs.items()
         },
+        "replicas": replicas,
     }
+
+
+def save_snapshot(router, path: str | os.PathLike) -> Path:
+    """Atomic JSON snapshot of the router's control-plane state."""
+    snap = control_plane_state(router)
     path = Path(path)
     tmp = path.with_suffix(path.suffix + ".tmp")
     tmp.write_text(json.dumps(snap, indent=1))
@@ -57,14 +91,22 @@ def restore_snapshot(router, path: str | os.PathLike) -> dict:
     the Waiting tier (its pages died with the old process); its context
     length and idleness window survive, so placement decisions pick up
     where they left off after the first recompute. Programs homed on
-    replicas beyond the new replica count are likewise Waiting.
+    replicas beyond the new replica count are likewise Waiting, and
+    programs that were resident in decode slots at snapshot time (their
+    step was mid-flight) are counted separately — their in-flight step is
+    simply re-issued after recompute, like a replica failure.
 
-    Returns counters {"restored": n, "requeued": m}.
+    Returns counters {"restored": n, "requeued": m, "was_resident": k}.
     """
     snap = json.loads(Path(path).read_text())
-    assert snap["version"] == FORMAT_VERSION, snap["version"]
+    assert snap["version"] in (1, FORMAT_VERSION), snap["version"]
     sched = router.sched
-    restored = requeued = 0
+    resident = {
+        s["pid"]
+        for rep in snap.get("replicas", [])
+        for s in rep.get("slots", [])
+    }
+    restored = requeued = was_resident = 0
     for pid, rec in snap["programs"].items():
         if rec["finished"]:
             continue
@@ -78,4 +120,10 @@ def restore_snapshot(router, path: str | os.PathLike) -> dict:
         prog.replica = None
         restored += 1
         requeued += 1
-    return {"restored": restored, "requeued": requeued}
+        if pid in resident:
+            was_resident += 1
+    return {
+        "restored": restored,
+        "requeued": requeued,
+        "was_resident": was_resident,
+    }

@@ -212,6 +212,9 @@ class ReplicaTransferPlane:
         self.engine = engine
         self.wake = wake
         self.on_committed = on_committed
+        # monotone progress counter the router's stall guard reads: every
+        # executed chunk tick counts, whether or not its job ever commits
+        self.chunks_executed = 0
         self._heap: list[tuple[float, int, Callable[[float], None]]] = []
         self._seq = itertools.count()
         self.channels = TransferChannels(
@@ -265,6 +268,7 @@ class ReplicaTransferPlane:
 
     def _job_chunk(self, job: CopyJob, now: float) -> None:
         task: _PlaneTask = job.payload
+        self.chunks_executed += 1
         task.stream.copy_unit()
 
     def _job_done(self, job: CopyJob, now: float) -> None:
@@ -298,3 +302,11 @@ class ReplicaTransferPlane:
 
     def pending_bytes(self) -> int:
         return self.channels.pending_bytes()
+
+    def describe_jobs(self) -> list[str]:
+        """Human-readable in-flight/queued jobs, for stall diagnostics."""
+        return [
+            f"{j.pid}#{j.action_id} {j.payload.kind} "
+            f"({j.chunks_done}/{max(1, j.n_chunks)} chunks, {j.nbytes}B)"
+            for j in self.channels.jobs()
+        ]

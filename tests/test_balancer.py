@@ -1,0 +1,112 @@
+"""ReplicaBalancer unit coverage: most-available-capacity placement,
+tie-breaking, the mark_failed/mark_recovered health paths (including the
+all-replicas-failed edge), and the beyond-paper straggler-penalty
+discount — none of which had dedicated tests before."""
+from __future__ import annotations
+
+from repro.core.balancer import ReplicaBalancer
+from repro.core.program import ProgramState
+from repro.core.tiers import ReplicaTiers
+from repro.core.types import SchedulerConfig, TierCapacity
+
+
+def make_balancer(frees, *, penalty=0.0):
+    replicas = [
+        ReplicaTiers(replica_id=i, capacity=TierCapacity(free, 0))
+        for i, free in enumerate(frees)
+    ]
+    cfg = SchedulerConfig(straggler_penalty=penalty)
+    return ReplicaBalancer(replicas, cfg), replicas
+
+
+def prog(tokens=10, kv_bytes_per_token=100):
+    p = ProgramState("p", kv_bytes_per_token)
+    p.context_tokens = tokens
+    return p
+
+
+class TestPlacement:
+    def test_picks_most_available_capacity(self):
+        bal, _ = make_balancer([1_000, 50_000, 30_000])
+        assert bal.place(prog(), 0.0) == 1
+
+    def test_capacity_accounts_for_admitted_programs(self):
+        bal, reps = make_balancer([50_000, 50_000])
+        reps[0].gpu_admit(prog(tokens=400))      # 40k used on replica 0
+        assert bal.place(prog(), 0.0) == 1
+
+    def test_tie_breaks_to_highest_replica_id(self):
+        # equal effective capacity sorts (free, replica_id) descending:
+        # the documented deterministic tie-break is the highest id
+        bal, _ = make_balancer([50_000, 50_000])
+        assert bal.place(prog(), 0.0) == 1
+
+    def test_none_when_nothing_fits(self):
+        bal, _ = make_balancer([500, 900])       # prog needs 1000 bytes
+        assert bal.place(prog(), 0.0) is None
+
+
+class TestHealth:
+    def test_failed_replica_excluded_until_recovered(self):
+        bal, _ = make_balancer([10_000, 50_000])
+        assert bal.place(prog(), 0.0) == 1
+        bal.mark_failed(1)
+        assert bal.place(prog(), 0.0) == 0
+        bal.mark_recovered(1)
+        assert bal.place(prog(), 0.0) == 1
+
+    def test_all_replicas_failed_places_nowhere(self):
+        bal, _ = make_balancer([10_000, 50_000])
+        bal.mark_failed(0)
+        bal.mark_failed(1)
+        assert bal.healthy() == []
+        assert bal.place(prog(), 0.0) is None
+
+    def test_mark_failed_is_idempotent(self):
+        bal, _ = make_balancer([10_000, 50_000])
+        bal.mark_failed(1)
+        bal.mark_failed(1)                       # double-fail is harmless
+        assert bal.place(prog(), 0.0) == 0
+        bal.mark_recovered(1)
+        bal.mark_recovered(1)                    # as is double-recover
+        assert bal.place(prog(), 0.0) == 1
+
+
+class TestStragglerPenalty:
+    def _slow_fleet(self, penalty):
+        # three equal-capacity replicas; replica 2's EWMA step latency is
+        # 10x the fleet median
+        bal, reps = make_balancer([50_000] * 3, penalty=penalty)
+        reps[0].ewma_step_latency_s = 0.1
+        reps[1].ewma_step_latency_s = 0.1
+        reps[2].ewma_step_latency_s = 1.0
+        return bal, reps
+
+    def test_discount_biases_away_from_straggler(self):
+        bal, _ = self._slow_fleet(penalty=0.5)
+        # without the discount the (free, id) tie-break would pick 2
+        assert bal.place(prog(), 0.0) == 1
+
+    def test_zero_penalty_ignores_latency(self):
+        bal, _ = self._slow_fleet(penalty=0.0)
+        assert bal.place(prog(), 0.0) == 2       # plain capacity tie-break
+
+    def test_extreme_penalty_clamps_at_zero_capacity(self):
+        # slowdown 9x with penalty 10 would go deeply negative without the
+        # clamp; the straggler must still never beat a healthy replica,
+        # and a fleet of one straggler still places (its own median)
+        bal, _ = self._slow_fleet(penalty=10.0)
+        assert bal.place(prog(), 0.0) == 1
+        bal.mark_failed(0)
+        bal.mark_failed(1)
+        assert bal.place(prog(), 0.0) == 2       # median of itself: no discount
+
+    def test_fully_discounted_straggler_defers_placement(self):
+        """With the healthy replicas full and the straggler's effective
+        capacity discounted to zero, place() declines rather than pile new
+        work onto the slow replica — the program waits for the next pass
+        (same admission-control semantics as a genuinely full fleet)."""
+        bal, reps = self._slow_fleet(penalty=0.5)
+        reps[0].gpu_admit(prog(tokens=495))
+        reps[1].gpu_admit(prog(tokens=495))      # 500 bytes free each
+        assert bal.place(prog(), 0.0) is None

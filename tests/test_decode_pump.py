@@ -1,0 +1,294 @@
+"""Clocked decode pump: batched multi-program replay on the real router.
+
+Acceptance gates of the continuous-batching refactor:
+
+* ≥4 concurrent programs on one replica genuinely decode *together* —
+  mean batch occupancy > 1.0, at least one step advancing ≥2 slots, and
+  transfer/decode overlap recorded against batched decode;
+* ``serial_decode=True`` reproduces the pre-refactor router's serialized
+  replay token-for-token (golden corpus captured from the pre-pump code);
+* the scheduler gates on *real* engine occupancy and ``on_slot_freed``
+  forwards gated programs the moment a batch slot opens, mid-window;
+* ``Engine.step(active=...)`` masking leaves resident-but-unpaced slots
+  untouched, so submit/decode interleaving never perturbs tokens;
+* the ``max_ctx`` trace-synthesis underflow raises a clear error instead
+  of silently corrupting the synthesized context.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import SchedulerConfig
+from repro.core.types import ProgramTrace, RequestRecord, TransferCost
+from repro.models import Model, materialize
+from repro.serving import Engine, EngineRequest, MoriRouter
+
+GOLDEN = Path(__file__).parent / "data" / "golden_serial_replay.json"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+    return cfg, params
+
+
+def _golden_traces():
+    def tr(pid, ctx, tool):
+        return ProgramTrace(pid, [
+            RequestRecord(ctx, 4, tool, reasoning_wall_s=1.0),
+            RequestRecord(ctx + 12, 4, 0.0, reasoning_wall_s=1.0),
+        ])
+
+    return [tr("p0", 48, 30.0), tr("p1", 56, 60.0), tr("p2", 90, 90.0)]
+
+
+def _concurrent_corpus():
+    """Four programs whose reasoning windows align (same walls, arrivals)
+    so the pump batches them, plus one long tool call that parks p3 idle
+    long enough for the control tick to demote it mid-replay."""
+    busy = [
+        ProgramTrace(f"p{i}", [
+            RequestRecord(48 + 4 * i, 4, 1.0, reasoning_wall_s=2.0),
+            RequestRecord(60 + 4 * i, 4, 1.0, reasoning_wall_s=2.0),
+            RequestRecord(72 + 4 * i, 4, 0.0, reasoning_wall_s=2.0),
+        ])
+        for i in range(3)
+    ]
+    idle = ProgramTrace("p3", [
+        RequestRecord(64, 4, 30.0, reasoning_wall_s=2.0),
+        RequestRecord(80, 4, 0.0, reasoning_wall_s=2.0),
+    ])
+    return busy + [idle]
+
+
+class TestBatchedReplay:
+    def test_four_programs_decode_together_with_overlap(self, setup):
+        """The tentpole's contract: one replica, ≥4 resident programs,
+        batched steps advancing several slots, and KV movement overlapping
+        genuinely batched decode (default async transfer mode)."""
+        cfg, params = setup
+        kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                        n_host_pages=128, max_slots=4, max_seq=256)
+        router = MoriRouter(
+            [engine], scheduler="mori",
+            # tight enough that p3's 30 s tool call gets it demoted once
+            # contexts grow, loose enough that the four initial programs
+            # all admit at t=0
+            gpu_capacity_bytes=250 * kvb,
+            config=SchedulerConfig(tick_interval_s=1.0),
+            # p3's offload streams for ~12 virtual seconds — across the
+            # busy programs' later decode windows
+            xfer_cost=TransferCost(pcie_bytes_per_s=64 * kvb / 12.0),
+        )
+        corpus = _concurrent_corpus()
+        m = router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=4)
+
+        assert m.steps_completed == sum(len(t.steps) for t in corpus)
+        # batch occupancy: programs really decoded together
+        assert m.mean_batch_occupancy > 1.0
+        assert m.multi_slot_steps >= 1
+        assert m.peak_live_slots == 4          # all four in one batched step
+        # overlap measured against batched decode, not a serialized loop
+        assert m.overlap_decode_steps > 0
+        assert m.offloaded_pages > 0           # the demotion really streamed
+        assert len(router.sched.ledger) == 0   # every transfer resolved
+
+    def test_pump_matches_serial_without_contention(self, setup):
+        """With no slot contention the pump changes *when* programs decode
+        relative to each other, never what they generate: token streams
+        equal the serialized replay's on the golden traces."""
+        cfg, params = setup
+        logs = {}
+        for serial in (False, True):
+            engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                            n_host_pages=64, max_slots=4, max_seq=512)
+            router = MoriRouter([engine], scheduler="mori",
+                                config=SchedulerConfig(),
+                                sync_transfers=True, serial_decode=serial)
+            m = router.replay(_golden_traces(), vocab_size=cfg.vocab_size,
+                              max_new_tokens=4)
+            assert m.steps_completed == 6
+            logs[serial] = router.output_log
+        assert logs[False] == logs[True]
+
+    def test_scheduler_gates_on_real_engine_occupancy(self, setup):
+        """Three programs on a 2-slot engine: the third gates on the slot
+        probe (real occupancy, no max_running config needed) and forwards
+        via on_slot_freed the moment a batch slot opens — long before the
+        first control tick at t=50."""
+        cfg, params = setup
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                        n_host_pages=64, max_slots=2, max_seq=256)
+        router = MoriRouter([engine], scheduler="mori",
+                            config=SchedulerConfig(tick_interval_s=50.0))
+        started: list[tuple[str, float]] = []
+        real_notify = router.sched.notify_inference_started
+
+        def spy(pid, now):
+            started.append((pid, now))
+            return real_notify(pid, now)
+
+        router.sched.notify_inference_started = spy
+        traces = [
+            ProgramTrace(f"p{i}", [
+                RequestRecord(40 + 4 * i, 4, 1.0, reasoning_wall_s=4.0),
+                RequestRecord(56 + 4 * i, 4, 0.0, reasoning_wall_s=1.0),
+            ])
+            for i in range(3)
+        ]
+        m = router.replay(traces, vocab_size=cfg.vocab_size, max_new_tokens=4)
+        assert m.steps_completed == 6
+        assert m.gated_events >= 1             # someone waited for a slot
+        gated_start = next(t for pid, t in started if pid == "p2")
+        # p2 joined the batch when a slot freed mid-window (engine finishes
+        # its 3 decode steps inside the 4 s wall), not at the t=50 tick
+        assert 0.0 < gated_start < 4.0
+
+    def test_pump_quantum_batches_heterogeneous_pacing(self, setup):
+        """Programs with different reasoning walls pace their steps on
+        different grids and only coincide at t=0; snapping due times to a
+        shared pump quantum makes them share batched steps again (tokens
+        unchanged — pacing moves step *times*, never step results)."""
+        cfg, params = setup
+        traces = [
+            ProgramTrace("fast", [RequestRecord(48, 4, 0.0,
+                                                reasoning_wall_s=2.0)]),
+            ProgramTrace("slow", [RequestRecord(56, 4, 0.0,
+                                                reasoning_wall_s=3.0)]),
+        ]
+        results = {}
+        for quantum in (None, 1.0):
+            engine = Engine(cfg, params, page_tokens=8, n_device_pages=128,
+                            n_host_pages=64, max_slots=2, max_seq=256)
+            router = MoriRouter([engine], scheduler="mori",
+                                pump_quantum_s=quantum)
+            m = router.replay(traces, vocab_size=cfg.vocab_size,
+                              max_new_tokens=4)
+            assert m.steps_completed == 2
+            results[quantum] = (m.multi_slot_steps, router.output_log)
+        # exact pacing shares only the t=0 join step; the 1 s grid aligns
+        # the rest of the two programs' schedules as well
+        assert results[1.0][0] > results[None][0]
+        assert results[1.0][1] == results[None][1]
+
+    def test_max_ctx_underflow_raises_clear_error(self, setup):
+        """Regression: max_seq - (max_new_tokens + 2) * steps - 8 used to
+        go non-positive for long traces and silently corrupt the
+        synthesized context length."""
+        cfg, params = setup
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                        n_host_pages=64, max_slots=2, max_seq=256)
+        router = MoriRouter([engine], scheduler="mori")
+        long_trace = ProgramTrace(
+            "long", [RequestRecord(40, 4, 0.1, reasoning_wall_s=0.1)] * 48
+        )
+        with pytest.raises(ValueError, match="cannot replay on this engine"):
+            router.replay([long_trace], vocab_size=cfg.vocab_size,
+                          max_new_tokens=4)
+        # the error names the knobs that fix it
+        try:
+            router2 = MoriRouter([engine], scheduler="mori")
+            router2.replay([long_trace], vocab_size=cfg.vocab_size,
+                           max_new_tokens=4)
+        except ValueError as e:
+            msg = str(e)
+            assert "max_seq" in msg and "max_new_tokens" in msg
+            assert "long" in msg
+
+
+class TestSerialGolden:
+    def test_serial_decode_reproduces_prerefactor_outputs(self, setup):
+        """``serial_decode=True`` is token-identical (output_log) to the
+        pre-refactor run-to-completion router, pinned by a golden capture
+        on two corpora: the contention-free golden traces (sync
+        transfers) and a generated 4-program pressure corpus (async)."""
+        cfg, params = setup
+        golden = json.loads(GOLDEN.read_text())
+
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                        n_host_pages=64, max_slots=4, max_seq=512)
+        router = MoriRouter([engine], scheduler="mori",
+                            config=SchedulerConfig(),
+                            sync_transfers=True, serial_decode=True)
+        router.replay(_golden_traces(), vocab_size=cfg.vocab_size,
+                      max_new_tokens=4)
+        assert router.output_log == golden["golden_sync"]
+
+        from repro.traces import TraceGenConfig, generate_corpus
+
+        tg = TraceGenConfig(
+            min_steps=3, mean_steps=4, max_steps=4,
+            initial_context_mean=700, max_context=1800,
+            long_median_s=20.0, busy_calls_mean=2.0, idle_calls_mean=2.0,
+        )
+        corpus = generate_corpus(4, seed=5, cfg=tg)
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=96,
+                        n_host_pages=96, max_slots=2, max_seq=320)
+        router = MoriRouter(
+            [engine], scheduler="mori", gpu_capacity_bytes=500_000,
+            config=SchedulerConfig(tick_interval_s=2.0),
+            serial_decode=True,
+            xfer_cost=TransferCost(pcie_bytes_per_s=2e5),
+        )
+        m = router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=4)
+        assert router.output_log == golden["pressure_async"]
+        assert m.steps_completed == golden["pressure_async_steps"]
+        # the serialized path never batches: exactly one live slot per step
+        assert m.mean_batch_occupancy == 1.0
+        assert m.multi_slot_steps == 0
+
+
+class TestEngineMaskedStep:
+    def test_masked_step_preserves_inactive_slots(self, setup):
+        """submit-while-decoding + per-slot pacing: a program that joins
+        mid-decode and steps on its own schedule produces exactly the
+        solo-run tokens, and the masked slot's state is untouched while
+        others advance."""
+        cfg, params = setup
+
+        def solo(pid, ctx):
+            eng = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                         n_host_pages=64, max_slots=2, max_seq=256)
+            eng.submit(EngineRequest(pid, ctx, max_new_tokens=6))
+            return eng.run_to_completion()[0].output_tokens
+
+        ctx_a = list(range(2, 47))
+        ctx_b = list(range(300, 338))
+        want_a, want_b = solo("a", ctx_a), solo("b", ctx_b)
+
+        eng = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                     n_host_pages=64, max_slots=2, max_seq=256)
+        out: dict[str, list[int]] = {}
+
+        def collect(comps):
+            for c in comps:
+                out[c.program_id] = c.output_tokens
+
+        sa = eng.submit(EngineRequest("a", ctx_a, max_new_tokens=6))
+        collect(eng.step(active=[sa]))           # a advances alone
+        collect(eng.step(active=[sa]))
+        sb = eng.submit(EngineRequest("b", ctx_b, max_new_tokens=6))
+        collect(eng.step(active=[sb]))           # b alone; a masked
+        collect(eng.step(active=[sb]))
+        collect(eng.step(active=[sa, sb]))       # batched
+        prog = eng.slot_progress()
+        assert prog[sa] == ("a", 4, 6) and prog[sb] == ("b", 4, 6)
+        while eng.slots:
+            collect(eng.step())                  # finish together
+        assert out["a"] == want_a
+        assert out["b"] == want_b
+
+    def test_step_with_no_due_slots_is_a_noop(self, setup):
+        cfg, params = setup
+        eng = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                     n_host_pages=64, max_slots=2, max_seq=256)
+        eng.submit(EngineRequest("a", list(range(2, 40)), max_new_tokens=3))
+        before = eng.steps
+        assert eng.step(active=[]) == []
+        assert eng.steps == before               # nothing was dispatched

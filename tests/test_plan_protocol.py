@@ -56,10 +56,13 @@ class TestSimRouterEquivalence:
         # sync_transfers: the compatibility mode whose execute-and-ack-
         # immediately semantics the simulator's fluid model reproduces
         # action-for-action on this trace (async mode acks on the transfer
-        # plane's own clock, so its stream interleaves differently)
+        # plane's own clock, so its stream interleaves differently).
+        # serial_decode: the pre-pump replay order the simulator's
+        # run-to-completion event model matches event-for-event (the
+        # batched decode pump interleaves scheduler events differently)
         router = MoriRouter([engine], scheduler="mori",
                             config=SchedulerConfig(), record_plans=True,
-                            sync_transfers=True)
+                            sync_transfers=True, serial_decode=True)
         router.replay(traces, vocab_size=cfg.vocab_size, max_new_tokens=4)
 
         # same KV geometry as the real engine, capacity far above the

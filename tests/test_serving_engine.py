@@ -162,7 +162,9 @@ class TestRouterIntegration:
         assert m.steps_completed >= 12
         assert m.cache_hit_rate > 0.5  # program-aware pinning pays off
         snap = snapshot_state(router)
-        assert snap["gpu_used"] == [0, 0]  # all programs finished and freed
+        # all programs finished and freed; no decode slot left resident
+        assert [r["gpu_used"] for r in snap["replicas"]] == [0, 0]
+        assert all(r["slots"] == [] for r in snap["replicas"])
 
     def test_replay_under_pressure_offloads(self, setup):
         cfg, _, params = setup

@@ -53,8 +53,11 @@ def test_snapshot_roundtrip(cfg_params, tmp_path):
     _mid_flight(router, n=3)
     p = save_snapshot(router, tmp_path / "state.json")
     snap = json.loads(p.read_text())
-    assert snap["version"] == 1
+    assert snap["version"] == 2
     assert len(snap["programs"]) == 3
+    # v2: per-replica tier usage + decode-slot occupancy (idle here)
+    assert len(snap["replicas"]) == 1
+    assert snap["replicas"][0]["slots"] == []
 
     router2 = _router(cfg, params)
     counters = restore_snapshot(router2, p)
@@ -105,6 +108,85 @@ def test_restore_onto_fewer_replicas(cfg_params, tmp_path):
     assert counters["restored"] == 5
     for prog in router1.sched.programs.values():
         assert prog.replica is None
+
+
+def test_snapshot_and_router_snapshot_state_share_one_schema(cfg_params, tmp_path):
+    """Regression for the duplicated control-plane serializers: the
+    router-level ``snapshot_state`` and ``state_io.save_snapshot`` used to
+    build overlapping dicts independently — now both come from
+    ``control_plane_state`` and are byte-identical."""
+    from repro.serving import snapshot_state
+    from repro.serving.state_io import control_plane_state
+
+    cfg, params = cfg_params
+    router = _router(cfg, params)
+    _mid_flight(router, n=3)
+    p = save_snapshot(router, tmp_path / "one.json")
+    assert json.loads(p.read_text()) == snapshot_state(router)
+    assert snapshot_state(router) == control_plane_state(router)
+
+
+def test_restore_accepts_v1_snapshots(cfg_params, tmp_path):
+    """Snapshots written before the per-slot occupancy section restore."""
+    cfg, params = cfg_params
+    router = _router(cfg, params)
+    _mid_flight(router, n=2)
+    snap = json.loads(save_snapshot(router, tmp_path / "v2.json").read_text())
+    snap["version"] = 1
+    snap.pop("replicas")
+    v1 = tmp_path / "v1.json"
+    v1.write_text(json.dumps(snap))
+
+    router2 = _router(cfg, params)
+    counters = restore_snapshot(router2, v1)
+    assert counters["restored"] == 2
+    assert counters["was_resident"] == 0
+
+
+def test_restore_under_load(cfg_params, tmp_path):
+    """Snapshot taken while programs are resident in decode slots: the
+    occupancy section names them, and restore conservatively requeues them
+    as Waiting with their control-plane state intact (their mid-flight
+    step re-issues after recompute, like a replica failure)."""
+    from repro.core.types import ProgramTrace, RequestRecord
+
+    cfg, params = cfg_params
+    router = _router(cfg, params)
+    # long reasoning walls so the t=2 control tick lands mid-decode with
+    # both programs batched in slots
+    traces = [
+        ProgramTrace(f"p{i}", [
+            RequestRecord(40 + 8 * i, 4, 1.0, reasoning_wall_s=10.0),
+            RequestRecord(70 + 8 * i, 4, 0.0, reasoning_wall_s=1.0),
+        ])
+        for i in range(2)
+    ]
+    path = tmp_path / "load.json"
+    real_tick = router.sched.tick
+
+    def snapshotting_tick(now):
+        plan = real_tick(now)
+        if not path.exists() and router._pump_slots[0]:
+            save_snapshot(router, path)
+        return plan
+
+    router.sched.tick = snapshotting_tick
+    router.replay(traces, vocab_size=cfg.vocab_size, max_new_tokens=4)
+    assert path.exists(), "no tick landed while decode slots were live"
+    snap = json.loads(path.read_text())
+    live = [s["pid"] for s in snap["replicas"][0]["slots"]]
+    assert sorted(live) == ["p0", "p1"]
+    for s in snap["replicas"][0]["slots"]:
+        assert s["window_end"] > s["started_at"]
+
+    router2 = _router(cfg, params)
+    counters = restore_snapshot(router2, path)
+    assert counters["restored"] == 2
+    assert counters["was_resident"] == 2
+    for pid in live:
+        prog = router2.sched.programs[pid]
+        assert prog.tier is Tier.NONE and prog.replica is None
+        assert prog.context_tokens > 0
 
 
 def test_tracker_window_roundtrip():

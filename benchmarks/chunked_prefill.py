@@ -1,0 +1,136 @@
+"""Chunked prefill inside the decode pump vs monolithic submits.
+
+Races the same multi-program agentic corpus through ``MoriRouter`` twice
+per batch size — ``chunked_prefill=True`` (the pump runs page-sized,
+bucket-shaped prefill chunks between decode steps) against the default
+monolithic path (each submit runs one eager variable-shape
+``Model.prefill`` before the program can join the batch) — and reports
+real end-to-end wall clock plus the TTFT summary ``RouterMetrics``
+records from each submit event to its first token.
+
+The corpus grows every program's context across steps, so the monolithic
+path sees a fresh prefix shape per submit and pays eager per-shape
+dispatch each time; the chunked path folds every prefill into the same
+few (prefix-bucket, chunk-bucket) jit shapes, compiled once per process.
+
+Writes ``artifacts/BENCH_chunked_prefill.json``; CI gates on chunked
+end-to-end wall ≤ monolithic and chunked mean TTFT strictly lower at
+every batch size ≥ 4.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import FULL, emit
+
+BATCHES = (1, 2, 4, 8) if FULL else (1, 2, 4)
+STEPS_PER_PROGRAM = 3
+#: short generations keep the race prefill-dominated: decode work is
+#: identical in both modes and would only dilute the measured difference
+MAX_NEW_TOKENS = 4
+PREFILL_BUDGET = 32
+
+
+def build_corpus(n: int):
+    """n programs with aligned arrivals and growing contexts: every
+    submit after the first presents a new prefix length, the shape churn
+    monolithic prefill pays for and bucketed chunks do not."""
+    from repro.core.types import ProgramTrace, RequestRecord
+
+    return [
+        ProgramTrace(
+            f"c{i}",
+            [
+                RequestRecord(
+                    48 + 4 * i + 12 * s, MAX_NEW_TOKENS,
+                    tool_duration_s=1.0, reasoning_wall_s=2.0,
+                )
+                for s in range(STEPS_PER_PROGRAM)
+            ],
+        )
+        for i in range(n)
+    ]
+
+
+def make_router(cfg, params, *, chunked: bool, slots: int):
+    from repro.core import SchedulerConfig
+    from repro.serving import Engine, MoriRouter
+
+    engine = Engine(cfg, params, page_tokens=8, n_device_pages=512,
+                    n_host_pages=64, max_slots=slots, max_seq=512)
+    engine.warmup(prefill_chunks=chunked)  # precompile decode buckets and
+    #                  (chunked mode) the chunk shapes: the race times the
+    #                  serving path, not jit
+    return MoriRouter(
+        [engine], scheduler="mori",
+        config=SchedulerConfig(tick_interval_s=5.0),
+        chunked_prefill=chunked,
+        prefill_token_budget=PREFILL_BUDGET if chunked else None,
+    )
+
+
+def run_one(cfg, params, *, batch: int, chunked: bool, timed: bool = True):
+    """One replay cell; timed cells take the best of two runs so a noisy
+    neighbor on a shared runner cannot flip the CI ≥-gate."""
+    best = None
+    for _ in range(2 if timed else 1):
+        corpus = build_corpus(batch)
+        router = make_router(cfg, params, chunked=chunked, slots=max(BATCHES))
+        t0 = time.perf_counter()
+        m = router.replay(corpus, vocab_size=cfg.vocab_size,
+                          max_new_tokens=MAX_NEW_TOKENS)
+        wall = time.perf_counter() - t0
+        assert m.steps_completed == batch * STEPS_PER_PROGRAM
+        if best is None or wall < best[0]:
+            best = (wall, m)
+    if not timed:
+        return None
+    wall, m = best
+    t = m.ttft_s
+    return {
+        "batch": batch,
+        "mode": "chunked" if chunked else "monolithic",
+        "wall_s": round(wall, 3),
+        "ttft_mean_s": round(t["mean"], 4),
+        "ttft_p50_s": round(t["p50"], 4),
+        "ttft_p95_s": round(t["p95"], 4),
+        "ttft_n": t["n"],
+        "prefill_chunks": m.prefill_chunks,
+        "tokens": m.tokens_generated,
+        "mean_batch_occupancy": round(m.mean_batch_occupancy, 3),
+    }
+
+
+def main() -> list[dict]:
+    from repro.configs import get_config
+    from repro.models import Model, materialize
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+
+    # one untimed pass per mode at top batch populates the in-process jit
+    # cache (decode buckets, chunk shapes) so neither timed mode pays
+    # first-compile costs the other skips
+    for chunked in (False, True):
+        run_one(cfg, params, batch=max(BATCHES), chunked=chunked,
+                timed=False)
+
+    rows = []
+    for batch in BATCHES:
+        for chunked in (False, True):
+            rows.append(run_one(cfg, params, batch=batch, chunked=chunked))
+    emit(rows, "BENCH_chunked_prefill.json")
+
+    by = {(r["batch"], r["mode"]): r for r in rows}
+    for batch in BATCHES:
+        ck, mo = by[(batch, "chunked")], by[(batch, "monolithic")]
+        print(
+            f"batch {batch}: chunked {ck['wall_s']}s e2e / "
+            f"{ck['ttft_mean_s']}s mean TTFT ({ck['prefill_chunks']} chunks) "
+            f"vs monolithic {mo['wall_s']}s / {mo['ttft_mean_s']}s"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -215,7 +215,15 @@ class AgentScheduler(abc.ABC):
     def attach_slot_probe(self, probe) -> None:
         """Install ``probe(replica) -> (free_slots, live_slots)`` so slot
         gating and ``running_count`` read real engine occupancy. Pass
-        ``None`` to detach and fall back to shadow bookkeeping."""
+        ``None`` to detach and fall back to shadow bookkeeping.
+
+        Occupancy contract: the live side counts every slot a program
+        *owns*, including slots still mid-prefill under the router's
+        chunked-prefill mode (``Engine.begin_submit`` reserves the slot
+        before any chunk runs) — a prefilling program must gate further
+        admissions exactly like a decoding one, and the probe owner only
+        reports a slot free again once the chunk pipeline drained and the
+        program retired."""
         self._slot_probe = probe
 
     def running_count(self, replica: int) -> int:

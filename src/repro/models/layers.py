@@ -135,14 +135,18 @@ def _largest_divisor(n: int, pref: int) -> int:
 
 def blockwise_attention(
     q, k, v, *, causal: bool, window: int | None = None, cap: float | None = None,
-    q_offset=0, kv_lengths=None, q_block: int = 512, kv_block: int = 1024,
-    ctx=None,
+    q_offset=0, kv_lengths=None, kv_hole=None, q_block: int = 512,
+    kv_block: int = 1024, ctx=None,
 ):
     """Flash-style online-softmax attention, pure jnp (portable path).
 
     q: [B, Sq, H, D]; k, v: [B, Skv, KH, D] (GQA: H = KH * G).
     ``q_offset``: absolute position of q[0] (decode/chunked prefill).
     ``kv_lengths``: [B] valid KV lengths (None = all valid).
+    ``kv_hole``: optional ``(lo, hi)`` — KV indices in ``[lo, hi)`` are
+    masked invalid for every query. Chunked prefill pads its page-gathered
+    prefix to a fixed bucket for shape-stable jit; the hole excludes the
+    padding between the real prefix length and the padded one.
 
     GQA is handled by repeating KV to the full head count up front: a
     [KH, G] reshape of the head dim would break GSPMD head sharding
@@ -183,7 +187,7 @@ def blockwise_attention(
     # instead of all nk and masking. Exact: skipped blocks are fully masked.
     skip_blocks = (
         window is not None and causal and kv_lengths is None
-        and (window + qb) // kb + 2 < nk
+        and kv_hole is None and (window + qb) // kb + 2 < nk
     )
     n_vis = min(nk, (window + qb) // kb + 2) if skip_blocks else nk
 
@@ -214,6 +218,9 @@ def blockwise_attention(
             m_ = mask[None, :, None, None, :]
             if kv_lengths is not None:
                 m_ = m_ & (kp[None, :] < kv_lengths[:, None])[:, None, None, None, :]
+            if kv_hole is not None:
+                lo, hi = kv_hole
+                m_ = m_ & ~((kp >= lo) & (kp < hi))[None, None, None, None, :]
             s = jnp.where(m_, s, -1e30)
             m_new = jnp.maximum(m, s.max(-1))
             alpha = jnp.exp(m - m_new)
@@ -368,14 +375,17 @@ def describe_dense_block(cfg: ModelConfig):
 
 def apply_dense_block(
     p, x, cfg: ModelConfig, *, positions, window=None, cache=None, lengths=None,
-    prefix=None, ctx=NULL_CTX, causal=True, ring_window: int | None = None,
+    prefix=None, prefix_valid=None, ctx=NULL_CTX, causal=True,
+    ring_window: int | None = None,
 ):
     """One transformer block. Modes:
 
     * sequence mode (cache is None): returns (x, (k, v), aux). With
       ``prefix=(pk, pv)`` (chunked prefill over a radix-cached prefix),
       attention runs over concat(prefix, current) — positions must already
-      be offset by the prefix length.
+      be offset by the prefix length. ``prefix_valid`` (traced scalar)
+      marks how many prefix positions are real when the prefix is padded
+      to a fixed bucket; positions in ``[prefix_valid, Sp)`` are masked.
     * decode mode (cache = (k_cache, v_cache) slot buffers): writes the new
       token at ``lengths - 1`` and returns (x, (k_cache, v_cache), aux)
     """
@@ -385,15 +395,17 @@ def apply_dense_block(
         p["attn"], a_in, h, kh, hd, positions, cfg.rope_theta, ctx=ctx
     )
     if cache is None:
-        k_att, v_att, q_off = k, v, 0
+        k_att, v_att, q_off, hole = k, v, 0, None
         if prefix is not None:
             pk, pv = prefix
             k_att = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
             v_att = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
             q_off = pk.shape[1]
+            if prefix_valid is not None:
+                hole = (prefix_valid, q_off)
         attn = blockwise_attention(
             q, k_att, v_att, causal=causal, window=window,
-            cap=cfg.attn_logit_softcap, q_offset=q_off, ctx=ctx,
+            cap=cfg.attn_logit_softcap, q_offset=q_off, kv_hole=hole, ctx=ctx,
         )
         B, S, _, _ = attn.shape
         attn = attn.reshape(B, S, h * hd)

@@ -157,11 +157,13 @@ class Model:
 
     # ------------------------------------------------------- sequence mode
     def sequence(self, params, x, positions, ctx=NULL_CTX, collect_cache=False,
-                 frames=None, prefix=None):
+                 frames=None, prefix=None, prefix_valid=None):
         """Run the full stack over a token-embedded sequence ``x`` [B,S,d].
 
         ``prefix``: optional {"k","v"} [L,B,Sp,KH,HD] radix-cached KV for
-        chunked prefill (dense families only). Returns
+        chunked prefill (dense families only). ``prefix_valid`` (traced
+        scalar) marks how many prefix positions are real when the prefix
+        is padded to a bucket for shape-stable jit. Returns
         (hidden, cache_tree_or_None, aux_loss).
         """
         cfg = self.cfg
@@ -175,7 +177,7 @@ class Model:
                 p, pre = xs
                 h, kv, aux = apply_dense_block(
                     p, h, cfg, positions=positions, window=cfg.sliding_window,
-                    prefix=pre, ctx=ctx,
+                    prefix=pre, prefix_valid=prefix_valid, ctx=ctx,
                 )
                 return h, (kv if collect_cache else None, aux)
 
@@ -483,7 +485,7 @@ class Model:
 
     # ------------------------------------------------------------ prefill
     def prefill(self, params, batch: dict, ctx=NULL_CTX, prefix=None,
-                logit_index: int | None = None):
+                logit_index=None, positions_offset=None, prefix_valid=None):
         """Full- or suffix-context forward; returns (last_logits, cache).
 
         With ``prefix`` (stacked radix-cached KV), this is chunked prefill:
@@ -491,10 +493,19 @@ class Model:
         prefix+suffix. The returned cache covers the suffix only.
 
         ``logit_index`` names the *token* position whose logits to return
-        (default: the last). The serving engine pads suffixes to a fixed
-        bucket so prefill compiles once per bucket instead of once per
-        length — causality guarantees positions at or before
-        ``logit_index`` never see the padding.
+        (default: the last; may be a traced scalar — the engine's jitted
+        chunk prefill passes it as an argument so the final-chunk shape
+        compiles once). The serving engine pads suffixes to a fixed bucket
+        so prefill compiles once per bucket instead of once per length —
+        causality guarantees positions at or before ``logit_index`` never
+        see the padding.
+
+        ``positions_offset``/``prefix_valid`` support a *bucketed* prefix:
+        when the prefix KV is padded past its real length for shape-stable
+        jit, ``positions_offset`` is the real absolute position of the
+        first suffix token (RoPE must use true positions, not padded
+        indices) and ``prefix_valid`` masks the padded prefix tail out of
+        attention. Both default to the unpadded behaviour.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
@@ -506,11 +517,13 @@ class Model:
             x = jnp.concatenate([img, x], axis=1)
         S = x.shape[1]
         q_off = 0 if prefix is None else prefix["k"].shape[2]
-        positions = q_off + jnp.arange(S)[None, :]
+        pos0 = q_off if positions_offset is None else positions_offset
+        positions = pos0 + jnp.arange(S)[None, :]
         x = ctx.constrain(x, ("batch", "seq", "embed_act"))
         h, cache, _ = self.sequence(
             params, x, positions, ctx, collect_cache=True,
             frames=batch.get("frames"), prefix=prefix,
+            prefix_valid=prefix_valid,
         )
         idx = -1 if logit_index is None else n_img + logit_index
         h = rmsnorm(h[:, idx, :], params["ln_f"])

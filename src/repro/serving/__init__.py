@@ -1,6 +1,6 @@
 """Real JAX serving plane: paged KV pool, engine, async transfer plane,
 MORI router."""
-from repro.serving.engine import Completion, Engine, EngineRequest
+from repro.serving.engine import Completion, Engine, EngineRequest, PrefillJob
 from repro.serving.kvpool import PagePool
 from repro.serving.router import MoriRouter, RouterMetrics, snapshot_state
 from repro.serving.ssm_engine import SsmEngine
@@ -12,6 +12,7 @@ __all__ = [
     "EngineRequest",
     "MoriRouter",
     "PagePool",
+    "PrefillJob",
     "ReplicaTransferPlane",
     "RouterMetrics",
     "SsmEngine",

@@ -30,6 +30,7 @@ mesh lowering in ``repro.launch.dryrun``.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import jax
@@ -58,6 +59,82 @@ class Completion:
     cached_tokens: int           # tokens served from the radix cache
     prefilled_tokens: int        # tokens actually prefilled
     reloaded_pages: int
+
+
+@dataclass
+class PrefillJob:
+    """A resumable chunked prefill: the two-phase twin of ``submit``.
+
+    ``Engine.begin_submit`` reserves the decode slot, enters the
+    radix-matched prefix pages and stages the suffix pages; each
+    ``Engine.prefill_step`` call then prefills one page-aligned,
+    budget-bounded chunk into the staged pages. The decode pump runs
+    chunks between decode steps so a long prefill never stalls the
+    whole batch. ``first_token`` is set by the final chunk, at which
+    point the job's slot is installed for decode.
+    """
+
+    request: EngineRequest
+    slot_id: int
+    suffix: list[int]            # tokens past the radix-cached prefix
+    cached_tokens: int
+    reloaded_pages: int
+    prefix_pages: list[int]      # radix device pages (referenced, pinned)
+    prefix_nodes: list
+    new_pages: list[int]         # staged suffix pages (allocated up front)
+    cursor: int = 0              # suffix tokens prefilled so far
+    chunks_run: int = 0
+    first_token: int | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.first_token is not None
+
+    @property
+    def remaining(self) -> int:
+        return len(self.suffix) - self.cursor
+
+
+def _chunk_prefill_impl(model, ctx, params, k_pages, v_pages, prefix_idx,
+                        write_idx, tokens, prefix_valid, pos0, take,
+                        logit_idx, page_tokens):
+    """One chunk of prefill, pool-in/pool-out (jit body; donation makes the
+    page scatter an in-place pool update). ``prefix_idx`` is padded to a
+    page bucket (garbage tail masked via ``prefix_valid``); ``write_idx``
+    is padded with a scratch page; chunk KV past ``take`` is zeroed so the
+    written tail page is byte-identical to the monolithic path's."""
+    from repro.serving.kvpool import gather_token_run, scatter_token_run
+
+    prefix = None
+    if prefix_idx.shape[0]:
+        pk, pv = gather_token_run(k_pages, v_pages, prefix_idx)
+        prefix = {"k": pk[:, None], "v": pv[:, None]}           # [L,1,Sp,KH,HD]
+    logits, cache = model.prefill(
+        params, {"tokens": tokens}, ctx=ctx, prefix=prefix,
+        logit_index=logit_idx, positions_offset=pos0,
+        prefix_valid=prefix_valid if prefix is not None else None,
+    )
+    k_c = cache["k"][:, 0]                                     # [L,C_pad,KH,HD]
+    v_c = cache["v"][:, 0]
+    keep = (jnp.arange(k_c.shape[1]) < take)[None, :, None, None]
+    k_c = jnp.where(keep, k_c, 0)
+    v_c = jnp.where(keep, v_c, 0)
+    k_pages, v_pages = scatter_token_run(
+        k_pages, v_pages, write_idx, k_c, v_c, page_tokens
+    )
+    return logits[0], k_pages, v_pages
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_prefill_fn(cfg: ModelConfig):
+    """Process-global jitted chunk prefill, keyed on the (hashable) model
+    config. Sharing the jit cache across Engine instances is the point:
+    chunk shapes are bucketed, so every engine in the process reuses the
+    same few compiles instead of paying a fresh trace per submit the way
+    monolithic variable-shape prefill does."""
+    model = Model(cfg)
+    fn = functools.partial(_chunk_prefill_impl, model, NULL_CTX)
+    return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(10,))
 
 
 @dataclass
@@ -96,6 +173,7 @@ class Engine:
         dense_slots: bool = False,
         table_bucket_pages: int = 4,
         prefill_bucket_tokens: int = 32,
+        prefill_chunk_tokens: int = 64,
     ):
         assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global_alternating, (
             "the real engine serves dense-cache families; see DESIGN.md"
@@ -121,6 +199,8 @@ class Engine:
         # suffix prefill pads to this bucket so jit compiles once per bucket
         # (not once per context length); causality keeps outputs identical
         self.prefill_bucket = max(1, prefill_bucket_tokens)
+        # default per-call token budget for prefill_step (page-aligned there)
+        self.prefill_chunk_tokens = max(1, prefill_chunk_tokens)
         self.pages_per_slot = -(-max_seq // page_tokens)
         # Paged mode stores decode state IN the pool, so the device pool is
         # provisioned with the HBM the dense slot buffers used to occupy:
@@ -166,6 +246,15 @@ class Engine:
             self._paged_decode_fn = jax.jit(
                 self._paged_decode_impl, donate_argnums=(1, 2)
             )
+            # chunked prefill: the process-global callable shares compiles
+            # across engines; placement engines need their own ShardCtx
+            if placement is None:
+                self._chunk_fn = _chunk_prefill_fn(cfg)
+            else:
+                self._chunk_fn = jax.jit(
+                    functools.partial(_chunk_prefill_impl, self.model, self.ctx),
+                    donate_argnums=(1, 2), static_argnums=(10,),
+                )
         # metrics
         self.steps = 0
         self.evicted_pages = {"gpu": 0, "cpu": 0}
@@ -179,7 +268,7 @@ class Engine:
         occupancy signal the scheduler's slot probe reads."""
         return len(self._free_slots)
 
-    def warmup(self) -> None:
+    def warmup(self, prefill_chunks: bool = False) -> None:
         """Precompile every decode-step shape before admitting traffic.
 
         The block-table path compiles once per table bucket (tables are
@@ -188,7 +277,12 @@ class Engine:
         batch first crosses a bucket boundary. The dense path has a single
         shape. Must run on an idle engine (the dummy step writes garbage
         KV into scratch pages / slot position 0, both overwritten by the
-        first real submit)."""
+        first real submit).
+
+        ``prefill_chunks=True`` additionally compiles the chunked-prefill
+        shapes (every prefix-page bucket x every chunk bucket up to the
+        default ``prefill_chunk_tokens``) by running dummy chunks against
+        scratch pages."""
         assert not self.slots, "warmup must run on an idle engine"
         toks = jnp.zeros(self.max_slots, jnp.int32)
         lens = jnp.ones(self.max_slots, jnp.int32)
@@ -209,6 +303,27 @@ class Engine:
                 jnp.zeros(self.max_slots, jnp.int32),
             )
             self.pool.adopt(new_k, new_v)
+        if not prefill_chunks:
+            return
+        T = self.page_tokens
+        cap = max(T, (self.prefill_chunk_tokens // T) * T)
+        cap_pad = -(-cap // self.prefill_bucket) * self.prefill_bucket
+        sp = int(scratch[0])
+        for pb in range(n_buckets + 1):
+            p_pad = pb * self._table_bucket
+            for c_pad in range(self.prefill_bucket, cap_pad + 1,
+                               self.prefill_bucket):
+                w_pad = -(-c_pad // T)
+                k_pages, v_pages = self.pool.block_table_view()
+                _, new_k, new_v = self._chunk_fn(
+                    self.params, k_pages, v_pages,
+                    jnp.asarray([sp] * p_pad, jnp.int32),
+                    jnp.asarray([sp] * w_pad, jnp.int32),
+                    jnp.zeros((1, c_pad), jnp.int32),
+                    jnp.int32(0), jnp.int32(0),
+                    jnp.int32(c_pad), jnp.int32(c_pad - 1), T,
+                )
+                self.pool.adopt(new_k, new_v)
 
     def submit(self, req: EngineRequest) -> int:
         """Admit one request: radix match -> reload -> chunked prefill."""
@@ -296,6 +411,155 @@ class Engine:
         self._tail_token[sid] = req.tokens[-1]  # prefill wrote its KV last
         self.slots[sid] = slot
         return sid
+
+    # --------------------------------------------------- chunked prefill
+    def begin_submit(self, req: EngineRequest) -> PrefillJob:
+        """Phase one of a chunked submit: radix match -> reload -> reserve.
+
+        Reserves a decode slot (occupancy is visible to the scheduler's
+        slot probe for the whole prefill), pins the matched prefix chain,
+        and stages every suffix page up front so ``prefill_step`` can
+        scatter chunk KV with a fixed-shape write. No model compute runs
+        here. On allocation failure all state is rolled back and the
+        RuntimeError propagates, mirroring ``submit``.
+        """
+        assert not self.dense_slots, "chunked prefill requires the paged engine"
+        assert self._free_slots, "no free decode slots"
+        assert len(req.tokens) + req.max_new_tokens <= self.max_seq
+        pid = req.program_id
+
+        reloaded = self._reload_prefix(req.tokens)
+        nodes = self.tree.match_prefix(req.tokens)
+        cached = len(nodes) * self.page_tokens
+        pages = [n.device_page for n in nodes]
+        suffix = req.tokens[cached:]
+        assert suffix, "request must extend its cached prefix"
+
+        self.tree.pin(pid)
+        for node in nodes:
+            node.refcount += 1
+        sid = self._free_slots.pop()
+        T = self.page_tokens
+        new_pages: list[int] = []
+        try:
+            for _ in range(len(pages), -(-len(req.tokens) // T)):
+                new_pages.append(self._alloc_decode_page())
+        except RuntimeError:
+            for page in new_pages:
+                self.pool.free_device(page)
+            for node in nodes:
+                node.refcount = max(0, node.refcount - 1)
+            self.tree.unpin(pid)
+            self._free_slots.append(sid)
+            raise
+        return PrefillJob(
+            request=req,
+            slot_id=sid,
+            suffix=suffix,
+            cached_tokens=cached,
+            reloaded_pages=reloaded,
+            prefix_pages=pages,
+            prefix_nodes=nodes,
+            new_pages=new_pages,
+        )
+
+    def prefill_step(self, job: PrefillJob, token_budget: int | None = None) -> bool:
+        """Run ONE bucketed prefill chunk of at most ``token_budget`` tokens
+        (page-aligned; default ``prefill_chunk_tokens``). Returns True when
+        the final chunk lands, at which point ``job.first_token`` is set and
+        the slot is installed for decode.
+
+        Shape discipline is what makes this fast: the chunk pads to
+        ``prefill_bucket`` tokens and the page-gathered prefix pads to the
+        table bucket (tail masked via ``prefix_valid``), so the jitted
+        chunk fn compiles once per (prefix-bucket, chunk-bucket) pair and
+        is shared process-wide — monolithic ``submit`` re-traces per
+        context length instead.
+        """
+        assert not job.done, "prefill job already completed"
+        assert job.remaining > 0, "prefill job was cancelled"
+        T = self.page_tokens
+        budget = self.prefill_chunk_tokens if token_budget is None else token_budget
+        cap = max(T, (budget // T) * T)          # page-aligned chunk ceiling
+        take = min(job.remaining, cap)
+        c_pad = -(-take // self.prefill_bucket) * self.prefill_bucket
+        scratch = self._scratch_pages[job.slot_id]
+
+        # prefix for this chunk: radix pages + suffix pages already written
+        # (the cursor is page-aligned on every chunk but the last)
+        prefix_pages = job.prefix_pages + job.new_pages[: job.cursor // T]
+        p_real = len(prefix_pages)
+        p_pad = -(-p_real // self._table_bucket) * self._table_bucket
+        prefix_idx = prefix_pages + [scratch] * (p_pad - p_real)
+
+        # staged pages this chunk writes, padded to the bucketed width with
+        # the slot's scratch page (pad lanes scatter zeros — harmless)
+        w0 = job.cursor // T
+        w_real = -(-take // T)
+        w_pad = -(-c_pad // T)
+        write_idx = job.new_pages[w0 : w0 + w_real]
+        write_idx = write_idx + [scratch] * (w_pad - len(write_idx))
+
+        chunk = job.suffix[job.cursor : job.cursor + take]
+        tokens = jnp.asarray([chunk + [0] * (c_pad - take)], jnp.int32)
+        pos0 = job.cached_tokens + job.cursor    # absolute chunk start
+        k_pages, v_pages = self.pool.block_table_view()
+        logits, new_k, new_v = self._chunk_fn(
+            self.params, k_pages, v_pages,
+            jnp.asarray(prefix_idx, jnp.int32),
+            jnp.asarray(write_idx, jnp.int32),
+            tokens,
+            jnp.int32(pos0),                     # prefix_valid == chunk start
+            jnp.int32(pos0),
+            jnp.int32(take),
+            jnp.int32(take - 1),                 # final-chunk logit position
+            T,
+        )
+        self.pool.adopt(new_k, new_v)
+        job.cursor += take
+        job.chunks_run += 1
+        if job.cursor < len(job.suffix):
+            return False
+        job.first_token = int(jnp.argmax(logits))
+        self._install_job(job)
+        return True
+
+    def _install_job(self, job: PrefillJob) -> None:
+        """Final chunk landed: install the job's slot for decode (the
+        chunked twin of ``submit``'s step 3)."""
+        req = job.request
+        sid = job.slot_id
+        length = len(req.tokens)
+        self.slots[sid] = _Slot(
+            request=req,
+            slot_id=sid,
+            length=length,
+            produced=[job.first_token],
+            cached_tokens=job.cached_tokens,
+            prefilled_tokens=len(job.suffix),
+            reloaded_pages=job.reloaded_pages,
+            table=list(job.prefix_pages) + list(job.new_pages),
+            owned_from=len(job.prefix_pages),
+            prefix_nodes=job.prefix_nodes,
+        )
+        self.lengths[sid] = length
+        self.last_token[sid] = job.first_token
+        self._tail_token[sid] = req.tokens[-1]
+
+    def cancel_prefill(self, job: PrefillJob) -> None:
+        """Abort a mid-flight prefill job: free the staged pages, release
+        the pinned prefix chain and return the reserved slot. Partially
+        written pages go back to the free list (pages are always fully
+        rewritten before anything attends over them)."""
+        assert not job.done, "job already installed; retire via decode"
+        for page in job.new_pages:
+            self.pool.free_device(page)
+        for node in job.prefix_nodes:
+            node.refcount = max(0, node.refcount - 1)
+        self.tree.unpin(job.request.program_id)
+        self._free_slots.append(job.slot_id)
+        self.lengths[job.slot_id] = 0
+        job.cursor = len(job.suffix)  # poison: no further prefill_step
 
     def _reload_prefix(self, tokens: list[int]) -> int:
         """Promote host-resident prefix pages to the device, best-effort.

@@ -22,6 +22,36 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def scatter_token_run(k_arr, v_arr, page_idx, k_tokens, v_tokens, page_tokens):
+    """Scatter a token run ``[L, S, KH, HD]`` into pool pages in ONE
+    functional update (pure; jit-safe, so the engine's chunked-prefill step
+    can run it under donation for an in-place pool write). ``page_idx``
+    receives consecutive ``page_tokens``-sized chunks; a partial tail is
+    zero-padded. Returns the updated ``(k_arr, v_arr)``."""
+    T = page_tokens
+    L, S, KH, HD = k_tokens.shape
+    n = len(page_idx) if isinstance(page_idx, list) else page_idx.shape[0]
+    pad = n * T - S
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_tokens = jnp.pad(k_tokens, widths)
+        v_tokens = jnp.pad(v_tokens, widths)
+    idx = jnp.asarray(page_idx, jnp.int32)
+    kc = k_tokens.reshape(L, n, T, KH, HD).astype(k_arr.dtype)
+    vc = v_tokens.reshape(L, n, T, KH, HD).astype(v_arr.dtype)
+    return k_arr.at[:, idx].set(kc), v_arr.at[:, idx].set(vc)
+
+
+def gather_token_run(k_arr, v_arr, page_idx):
+    """Gather pages -> ``[L, n*page_tokens, KH, HD]`` (pure; jit-safe twin
+    of :meth:`PagePool.read_device_pages`)."""
+    idx = jnp.asarray(page_idx, jnp.int32)
+    k = k_arr[:, idx]                                           # [L,n,t,KH,HD]
+    v = v_arr[:, idx]
+    L, n, t, KH, HD = k.shape
+    return k.reshape(L, n * t, KH, HD), v.reshape(L, n * t, KH, HD)
+
+
 @dataclass
 class PoolStats:
     device_free: int
@@ -138,26 +168,13 @@ class PagePool:
         """
         if not pages:
             return
-        T = self.page_tokens
-        L, S, KH, HD = k_tokens.shape
-        pad = len(pages) * T - S
-        if pad:
-            widths = ((0, 0), (0, pad), (0, 0), (0, 0))
-            k_tokens = jnp.pad(k_tokens, widths)
-            v_tokens = jnp.pad(v_tokens, widths)
-        idx = jnp.asarray(pages, jnp.int32)
-        kc = k_tokens.reshape(L, len(pages), T, KH, HD).astype(self.k.dtype)
-        vc = v_tokens.reshape(L, len(pages), T, KH, HD).astype(self.v.dtype)
-        self.k = self.k.at[:, idx].set(kc)
-        self.v = self.v.at[:, idx].set(vc)
+        self.k, self.v = scatter_token_run(
+            self.k, self.v, pages, k_tokens, v_tokens, self.page_tokens
+        )
 
     def read_device_pages(self, pages: list[int]):
         """Gather pages -> [L, n*page_tokens, KH, HD] (slot assembly)."""
-        idx = jnp.asarray(pages, jnp.int32)
-        k = self.k[:, idx]                                      # [L,n,t,KH,HD]
-        v = self.v[:, idx]
-        L, n, t, KH, HD = k.shape
-        return k.reshape(L, n * t, KH, HD), v.reshape(L, n * t, KH, HD)
+        return gather_token_run(self.k, self.v, pages)
 
     # ----------------------------------------------------------- transfers
     def _encode_host(self, dev_arr) -> np.ndarray:

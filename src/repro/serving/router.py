@@ -26,6 +26,19 @@ replay — each dispatched request runs to completion before the next
 event — pinned token-identical by ``tests/test_decode_pump.py``'s golden
 corpus.
 
+``MoriRouter(chunked_prefill=True)`` makes prefill itself preemptible:
+admission goes through the engine's two-phase ``begin_submit`` /
+``prefill_step`` API, the ``_PumpSlot`` sits in a *prefilling* state
+(owning its engine slot, visible to occupancy probes, never stepping)
+while the pump runs one ``prefill_token_budget``-bounded chunk per settle
+visit, and due decode steps interleave between chunks instead of stalling
+behind a whole prefill (``RouterMetrics.prefill_interleaved_steps``).
+Chunk shapes are bucketed so the jitted chunk prefill compiles once per
+bucket process-wide — monolithic submit re-traces per context length —
+which is where the measured TTFT win (``RouterMetrics.ttft_s``) comes
+from. Token streams are pinned identical to monolithic submit by
+``tests/test_chunked_prefill.py``.
+
 Transfers execute in one of two modes:
 
 * **async (default)** — an ``Offload`` or reloading ``Forward`` becomes a
@@ -64,6 +77,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import time
 from dataclasses import dataclass, field
 
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
@@ -113,11 +127,35 @@ class RouterMetrics:
     multi_slot_steps: int = 0        # steps that advanced ≥ 2 slots
     slot_wait_s: float = 0.0         # Forward release → engine-submit wait
     slot_waits: int = 0              # submits that waited on a full batch
+    # chunked prefill (zero when chunked_prefill is off)
+    prefill_chunks: int = 0          # prefill_step calls executed by the pump
+    prefill_interleaved_steps: int = 0  # decode steps with a prefill in flight
+    # real (wall-clock) submit-event → first-token latency per program step —
+    # the paper's headline TTFT, measured on the actual execution path
+    ttft_samples: list = field(default_factory=list)
 
     @property
     def cache_hit_rate(self) -> float:
         total = self.cached_tokens + self.prefilled_tokens
         return self.cached_tokens / total if total else 0.0
+
+    @property
+    def ttft_s(self) -> dict:
+        """Summary of real time-to-first-token: ``{n, mean, p50, p95}``
+        (seconds, nearest-rank percentiles; zeros when nothing retired)."""
+        xs = sorted(self.ttft_samples)
+        if not xs:
+            return {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0}
+
+        def pct(p: float) -> float:
+            return xs[min(len(xs) - 1, max(0, math.ceil(p * len(xs)) - 1))]
+
+        return {
+            "n": len(xs),
+            "mean": sum(xs) / len(xs),
+            "p50": pct(0.50),
+            "p95": pct(0.95),
+        }
 
     @property
     def mean_batch_occupancy(self) -> float:
@@ -142,10 +180,19 @@ class _PumpSlot:
     steps_taken: int = 0
     next_due: float = 0.0
     done: Completion | None = None
+    # chunked prefill: the resumable engine job while the slot is still
+    # prefilling (None once the first token lands / in monolithic mode).
+    # A prefilling slot owns its engine slot — occupancy probes count it —
+    # but never steps decode and never retires until the pipeline drains.
+    prefill: "object | None" = None
 
     @property
     def end(self) -> float:
         return self.start + self.wall
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill is not None
 
 
 @dataclass
@@ -175,6 +222,8 @@ class MoriRouter:
         sync_transfers: bool = False,
         serial_decode: bool = False,
         pump_quantum_s: float | None = None,
+        chunked_prefill: bool = False,
+        prefill_token_budget: int | None = None,
         xfer_cost: TransferCost | None = None,
         hw: "object | None" = None,   # repro.sim.hardware.HwConfig
     ):
@@ -220,6 +269,20 @@ class MoriRouter:
 
         self.serial_decode = serial_decode
         self.pump_quantum_s = pump_quantum_s
+        if chunked_prefill:
+            if serial_decode:
+                raise ValueError(
+                    "chunked_prefill needs the decode pump; serial_decode "
+                    "replay keeps the monolithic golden path"
+                )
+            if any(getattr(e, "dense_slots", True) for e in engines):
+                raise ValueError(
+                    "chunked_prefill requires paged engines "
+                    "(dense_slots=False)"
+                )
+        self.chunked_prefill = chunked_prefill
+        self.prefill_token_budget = prefill_token_budget
+        self._ttft_start: dict[tuple[str, int], float] = {}
         # per-replica decode batches (pid -> _PumpSlot); always empty in
         # serial_decode mode
         self._pump_slots: list[dict[str, _PumpSlot]] = [{} for _ in engines]
@@ -287,6 +350,12 @@ class MoriRouter:
         )
         free = self.engines[replica].free_slot_count()
         return max(0, free - queued), len(self._pump_slots[replica]) + queued
+
+    def _record_ttft(self, pid: str, step_idx: int) -> None:
+        """First token just landed for (pid, step): close its TTFT sample."""
+        t0 = self._ttft_start.pop((pid, step_idx), None)
+        if t0 is not None:
+            self.metrics.ttft_samples.append(time.perf_counter() - t0)
 
     # ------------------------------------------------------- plan executor
     def apply_plan(self, plan: PlacementPlan) -> None:
@@ -413,6 +482,7 @@ class MoriRouter:
         import random
 
         rng = random.Random(seed)
+        self._ttft_start.clear()
         q: list[tuple[float, int, object]] = []
         seq = itertools.count()
 
@@ -549,6 +619,9 @@ class MoriRouter:
             max_new_tokens=rs.max_new_tokens,
         )
         self._pending[pid] = (req, step_idx)
+        # TTFT clock starts at the submit event (real time): scheduler
+        # gating and slot waits are part of the latency a caller sees
+        self._ttft_start[(pid, step_idx)] = time.perf_counter()
         self.apply_plan(self.sched.request_arrived(pid, want, now))
         if pid not in self._dispatched:
             self.metrics.gated_events += 1
@@ -604,6 +677,7 @@ class MoriRouter:
         self._dispatch_time.pop(pid, None)
         eng = self.engines[act.replica]
         eng.submit(req)
+        self._record_ttft(pid, step_idx)
         self.sched.notify_inference_started(pid, now)
         trace: ProgramTrace = st["trace"]
         rec = trace.steps[step_idx]
@@ -701,12 +775,31 @@ class MoriRouter:
             self._submit_into_slot(pid, r, now)
             acted = True
 
+        # 2b. advance chunked prefills — ONE budgeted chunk per slot per
+        #     visit, so the settle loop interleaves due decode steps between
+        #     chunks instead of stalling the batch behind a whole prefill.
+        #     The pipeline drains within the admission instant (prefill is
+        #     virtually instantaneous, like monolithic submit), and the slot
+        #     only becomes step-eligible — and ``on_slot_freed``-relevant —
+        #     once its final chunk lands.
+        prefilling = sorted(
+            (s for s in slots.values() if s.prefilling), key=lambda s: s.seq
+        )
+        for slot in prefilling:
+            finished = eng.prefill_step(slot.prefill, self.prefill_token_budget)
+            self.metrics.prefill_chunks += 1
+            acted = True
+            if finished:
+                slot.prefill = None
+                self._record_ttft(slot.pid, slot.step_idx)
+
         # 3. one batched decode step advancing every due slot together
         if not allow_step:
             return acted
         due = sorted(
             (s for s in slots.values()
-             if s.done is None and s.next_due <= now + _EPS),
+             if s.done is None and not s.prefilling
+             and s.next_due <= now + _EPS),
             key=lambda s: s.seq,
         )
         if due:
@@ -718,6 +811,10 @@ class MoriRouter:
             m.peak_live_slots = max(m.peak_live_slots, len(due))
             if len(due) >= 2:
                 m.multi_slot_steps += 1
+            if any(s.prefilling for s in slots.values()):
+                # the chunked-prefill payoff: decode kept running while a
+                # join was still mid-prefill on this replica
+                m.prefill_interleaved_steps += 1
             if busy:
                 m.overlap_decode_steps += 1
             for s in due:
@@ -749,7 +846,15 @@ class MoriRouter:
         rs = self._rs
         req, step_idx = self._pending.pop(pid)
         self._dispatched.pop(pid)
-        sid = self.engines[r].submit(req)
+        job = None
+        if self.chunked_prefill:
+            # two-phase admission: reserve the slot now, prefill in budgeted
+            # chunks from the pump (stage 2b) while other slots keep decoding
+            job = self.engines[r].begin_submit(req)
+            sid = job.slot_id
+        else:
+            sid = self.engines[r].submit(req)
+            self._record_ttft(pid, step_idx)
         self.sched.notify_inference_started(pid, now)
         rec = rs.state[pid]["trace"].steps[step_idx]
         wall = rec.reasoning_wall_s
@@ -758,7 +863,7 @@ class MoriRouter:
         self._pump_slots[r][pid] = _PumpSlot(
             pid=pid, replica=r, engine_slot=sid, req=req, step_idx=step_idx,
             start=now, wall=wall, dt=dt, seq=next(self._slot_seq),
-            next_due=now,
+            next_due=now, prefill=job,
         )
         # guarantee a final same-instant pump visit: if stepping is being
         # deferred for same-time batching, this wake is where it happens
@@ -786,7 +891,7 @@ class MoriRouter:
             m.steps_completed, m.tokens_generated, m.pump_steps,
             m.offloaded_pages, m.reloaded_pages, m.nvme_reloaded_pages,
             m.cancelled_pages, m.cancelled_offloads, m.gated_events,
-            m.recompute_submits,
+            m.recompute_submits, m.prefill_chunks,
             sum(e.steps for e in self.engines),
             sum(p.chunks_executed for p in self.planes),
         )
@@ -831,7 +936,8 @@ class MoriRouter:
             if slots:
                 desc = [
                     f"{s.pid}(step {s.step_idx}, {s.steps_taken} decode steps,"
-                    f" window ends t={s.end:.3f})"
+                    + (" prefilling," if s.prefilling else "")
+                    + f" window ends t={s.end:.3f})"
                     for s in sorted(slots.values(), key=lambda s: s.seq)
                 ]
                 parts.append(f"replica {r} resident slots: {desc}")

@@ -1,0 +1,623 @@
+"""Custom AST lint encoding the invariants this repo keeps re-learning.
+
+Run as ``python -m repro.analysis.lint [paths...]`` (defaults to
+``src tests benchmarks examples``). Exit code 1 when violations exist.
+
+Rules (suppress a finding with a ``# lint: <rule>-ok`` marker on the
+flagged line):
+
+* **KV001 donated-reuse** — an array passed to a jitted call whose
+  ``donate_argnums`` covers it is *invalidated* by that call; any later
+  read of the same name in the function is a use-after-donate (the bug
+  class behind the PR 5 decode-buffer clobber).
+* **KV002 lru-cache-hashable** — ``functools.lru_cache`` keys must be
+  hashable and immutable: parameters must be annotated, never with a
+  known-unhashable container type, and any repo dataclass used as a key
+  must be ``frozen=True`` (a mutable dataclass hashes by identity or
+  not at all, silently splitting or poisoning the cache).
+* **KV003 action-exhaustive** — an ``isinstance`` dispatch chain over
+  the :mod:`repro.core.actions` union must either name every action
+  type or carry an ``else`` branch; otherwise a newly added action is
+  silently dropped by that executor (the ``apply_plan`` family).
+* **KV004 pin-paired** — a scope (class or module) that calls
+  ``tree.pin()`` / ``tree.acquire_nodes()`` must also contain the
+  matching ``unpin()``/``release_program()`` / ``release_nodes()``
+  call; a pin with no release in sight leaks refcounts and wedges
+  eviction.
+* **KV005 wall-clock** — modules under ``repro/core`` or ``repro/sim``
+  run on the replay's *virtual clock*; ``time.time()`` /
+  ``time.monotonic()`` / ``datetime.now()`` there silently couples
+  policy decisions to the host's wall clock. (``perf_counter`` is
+  allowed: it measures real compute overhead, which is the point.)
+* **KV006 jit-shape-branch** — Python ``if``/``while`` on ``.shape`` /
+  ``len()`` / ``.ndim`` inside a function handed directly to
+  ``jax.jit`` recompiles per shape; either bucket the shapes
+  deliberately (and mark the line) or hoist the branch out of the
+  jitted body.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from dataclasses import dataclass
+
+_DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+#: the Action union (see ``repro.core.actions._ACTION_TYPES``) — kept as a
+#: literal so the linter never imports runtime code
+ACTION_NAMES = frozenset(
+    {"Forward", "Offload", "Discard", "Migrate", "SetLabel", "CancelTransfer"}
+)
+
+_UNHASHABLE = frozenset(
+    {"list", "dict", "set", "bytearray", "List", "Dict", "Set",
+     "ndarray", "Array", "array"}
+)
+_WALLCLOCK_TIME_ATTRS = frozenset({"time", "monotonic", "localtime"})
+_WALLCLOCK_DT_ATTRS = frozenset({"now", "utcnow", "today"})
+_PIN_CALLS = frozenset({"pin", "acquire_nodes"})
+_UNPIN_CALLS = frozenset({"unpin", "release_program", "release_nodes"})
+
+
+@dataclass
+class Violation:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def _dotted(node) -> str | None:
+    """``a.b.c`` attribute chains as a string (None for anything else)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(func) -> bool:
+    d = _dotted(func)
+    return d in ("jax.jit", "jit")
+
+
+def _is_partial(func) -> bool:
+    d = _dotted(func)
+    return d in ("functools.partial", "partial")
+
+
+def _suppressed(lines: list[str], lineno: int, rule_key: str) -> bool:
+    if 1 <= lineno <= len(lines):
+        return f"lint: {rule_key}-ok" in lines[lineno - 1]
+    return False
+
+
+def _ann_base(ann) -> str | None:
+    """The base type name of an annotation expression."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Subscript):
+        return _ann_base(ann.value)
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        head = ann.value.split("[", 1)[0].strip()
+        return head.rsplit(".", 1)[-1] or None
+    if isinstance(ann, ast.BinOp):            # X | None unions
+        return _ann_base(ann.left)
+    return None
+
+
+# --------------------------------------------------------------------------
+# module pre-pass: dataclass registry (name -> frozen?) across all files
+# --------------------------------------------------------------------------
+def _index_dataclasses(tree: ast.Module, registry: dict[str, bool]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _dotted(target) not in ("dataclass", "dataclasses.dataclass"):
+                continue
+            frozen = False
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                        frozen = bool(kw.value.value)
+            registry[node.name] = frozen
+
+
+# --------------------------------------------------------------------------
+# KV001 donated-reuse
+# --------------------------------------------------------------------------
+def _donated_targets(tree: ast.Module) -> dict[tuple[str, str], tuple[int, ...]]:
+    """Map a callable's reference key -> donated positional indices, from
+    ``X = jax.jit(fn, donate_argnums=(...))`` assignments."""
+    out: dict[tuple[str, str], tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        if not _is_jax_jit(call.func):
+            continue
+        donated: tuple[int, ...] = ()
+        for kw in call.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            if isinstance(kw.value, ast.Tuple):
+                donated = tuple(
+                    e.value for e in kw.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                )
+            elif isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, int
+            ):
+                donated = (kw.value.value,)
+        if not donated:
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                out[("name", tgt.id)] = donated
+            elif (
+                isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"
+            ):
+                out[("self", tgt.attr)] = donated
+    return out
+
+
+def _expr_key(node) -> tuple[str, str] | None:
+    if isinstance(node, ast.Name):
+        return ("name", node.id)
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return ("self", node.attr)
+    return None
+
+
+def _refs_of(func: ast.FunctionDef, key: tuple[str, str]):
+    for node in ast.walk(func):
+        if key[0] == "name" and isinstance(node, ast.Name) and node.id == key[1]:
+            yield node
+        elif (
+            key[0] == "self"
+            and isinstance(node, ast.Attribute)
+            and node.attr == key[1]
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+        ):
+            yield node
+
+
+def _enclosing_stmt(func: ast.FunctionDef, call: ast.Call) -> ast.stmt | None:
+    best = None
+    for node in ast.walk(func):
+        if not isinstance(node, ast.stmt):
+            continue
+        if node.lineno <= call.lineno and (node.end_lineno or 0) >= (
+            call.end_lineno or call.lineno
+        ):
+            if best is None or node.lineno >= best.lineno:
+                best = node
+    return best
+
+
+def check_donated_reuse(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    del registry
+    targets = _donated_targets(tree)
+    if not targets:
+        return []
+    out: list[Violation] = []
+    for func in ast.walk(tree):
+        if not isinstance(func, ast.FunctionDef):
+            continue
+        for call in ast.walk(func):
+            if not isinstance(call, ast.Call):
+                continue
+            ckey = _expr_key(call.func)
+            if ckey not in targets:
+                continue
+            stmt = _enclosing_stmt(func, call)
+            for pos in targets[ckey]:
+                if pos >= len(call.args):
+                    continue
+                akey = _expr_key(call.args[pos])
+                if akey is None:
+                    continue
+                call_end = (call.end_lineno or call.lineno,
+                            call.end_col_offset or 0)
+                # a Store to the donated name in the same statement
+                # (``x, y = fn(..., x, y)``) rebinds it — taint cleared
+                if stmt is not None and any(
+                    isinstance(r.ctx, ast.Store)
+                    for r in _refs_of(func, akey)
+                    if stmt.lineno <= r.lineno <= (stmt.end_lineno or 0)
+                    and (r.lineno, r.col_offset) < (call.lineno, call.col_offset)
+                ):
+                    continue
+                after = sorted(
+                    (
+                        r
+                        for r in _refs_of(func, akey)
+                        if (r.lineno, r.col_offset) > call_end
+                    ),
+                    key=lambda r: (r.lineno, r.col_offset),
+                )
+                for ref in after:
+                    if isinstance(ref.ctx, ast.Store):
+                        break               # rebound: donation resolved
+                    if not _suppressed(lines, ref.lineno, "donated-reuse"):
+                        name = (
+                            akey[1] if akey[0] == "name" else f"self.{akey[1]}"
+                        )
+                        out.append(Violation(
+                            path, ref.lineno, "KV001",
+                            f"`{name}` is read after being donated to the "
+                            f"jitted call on line {call.lineno} "
+                            f"(donate_argnums position {pos}); the buffer "
+                            f"is invalidated by donation — rebind the "
+                            f"call's result first",
+                        ))
+                    break
+    return out
+
+
+# --------------------------------------------------------------------------
+# KV002 lru-cache-hashable
+# --------------------------------------------------------------------------
+def _is_cache_decorator(dec) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    return _dotted(target) in (
+        "lru_cache", "functools.lru_cache", "cache", "functools.cache",
+    )
+
+
+def check_lru_cache_hashable(
+    path: str, tree: ast.Module, lines: list[str], registry: dict[str, bool]
+) -> list[Violation]:
+    out: list[Violation] = []
+    for func in ast.walk(tree):
+        if not isinstance(func, ast.FunctionDef):
+            continue
+        if not any(_is_cache_decorator(d) for d in func.decorator_list):
+            continue
+        if _suppressed(lines, func.lineno, "lru-cache-hashable"):
+            continue
+        all_args = func.args.posonlyargs + func.args.args + func.args.kwonlyargs
+        for arg in all_args:
+            if arg.arg in ("self", "cls"):
+                continue
+            if arg.annotation is None:
+                out.append(Violation(
+                    path, func.lineno, "KV002",
+                    f"cached function `{func.name}` has unannotated "
+                    f"parameter `{arg.arg}` — cache keys must be "
+                    f"demonstrably hashable (annotate it)",
+                ))
+                continue
+            base = _ann_base(arg.annotation)
+            if base in _UNHASHABLE:
+                out.append(Violation(
+                    path, func.lineno, "KV002",
+                    f"cached function `{func.name}` keys on unhashable "
+                    f"`{base}` parameter `{arg.arg}`",
+                ))
+            elif base in registry and not registry[base]:
+                out.append(Violation(
+                    path, func.lineno, "KV002",
+                    f"cached function `{func.name}` keys on dataclass "
+                    f"`{base}` which is not frozen=True — mutable keys "
+                    f"poison or split the cache",
+                ))
+    return out
+
+
+# --------------------------------------------------------------------------
+# KV003 action-exhaustive
+# --------------------------------------------------------------------------
+def _isinstance_targets(test) -> set[str]:
+    names: set[str] = set()
+    for node in ast.walk(test):
+        if not (isinstance(node, ast.Call) and _dotted(node.func) == "isinstance"):
+            continue
+        if len(node.args) != 2:
+            continue
+        spec = node.args[1]
+        elts = spec.elts if isinstance(spec, ast.Tuple) else [spec]
+        for e in elts:
+            d = _dotted(e)
+            if d is not None:
+                names.add(d.rsplit(".", 1)[-1])
+    return names
+
+
+def check_action_exhaustive(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    del registry
+    out: list[Violation] = []
+    elif_nodes: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.If) and len(node.orelse) == 1 and isinstance(
+            node.orelse[0], ast.If
+        ):
+            elif_nodes.add(id(node.orelse[0]))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.If) or id(node) in elif_nodes:
+            continue
+        covered: set[str] = set()
+        cur = node
+        has_else = False
+        while True:
+            covered |= _isinstance_targets(cur.test)
+            if len(cur.orelse) == 1 and isinstance(cur.orelse[0], ast.If):
+                cur = cur.orelse[0]
+                continue
+            has_else = bool(cur.orelse)
+            break
+        handled_actions = covered & ACTION_NAMES
+        if len(handled_actions) < 2:
+            continue                     # not an Action-union dispatcher
+        missing = ACTION_NAMES - covered
+        if missing and not has_else:
+            if not _suppressed(lines, node.lineno, "action-exhaustive"):
+                out.append(Violation(
+                    path, node.lineno, "KV003",
+                    f"Action dispatch does not handle "
+                    f"{sorted(missing)} and has no `else` — a new or "
+                    f"unrouted action would be silently dropped",
+                ))
+    return out
+
+
+# --------------------------------------------------------------------------
+# KV004 pin-paired
+# --------------------------------------------------------------------------
+def _call_attr_names(scope) -> dict[str, int]:
+    """attr-call name -> first line, over a class body or statement list."""
+    found: dict[str, int] = {}
+    nodes = scope if isinstance(scope, list) else [scope]
+    for root in nodes:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                found.setdefault(node.func.attr, node.lineno)
+    return found
+
+
+def check_pin_paired(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    del registry
+    out: list[Violation] = []
+    scopes: list[tuple[str, object]] = []
+    module_rest = [
+        n for n in tree.body if not isinstance(n, ast.ClassDef)
+    ]
+    scopes.append(("module scope", module_rest))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            scopes.append((f"class {node.name}", node))
+    for label, scope in scopes:
+        calls = _call_attr_names(scope)
+        pins = {c: ln for c, ln in calls.items() if c in _PIN_CALLS}
+        has_release = bool(set(calls) & _UNPIN_CALLS)
+        if pins and not has_release:
+            name, line = min(pins.items(), key=lambda kv: kv[1])
+            if _suppressed(lines, line, "pin-paired"):
+                continue
+            out.append(Violation(
+                path, line, "KV004",
+                f"`{name}()` called in {label} with no matching "
+                f"unpin()/release_program()/release_nodes() anywhere in "
+                f"the scope — leaked refcounts wedge eviction",
+            ))
+    return out
+
+
+# --------------------------------------------------------------------------
+# KV005 wall-clock
+# --------------------------------------------------------------------------
+def _virtual_clock_module(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    return "repro/core/" in p or "repro/sim/" in p
+
+
+def check_wall_clock(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    del registry
+    if not _virtual_clock_module(path):
+        return []
+    out: list[Violation] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+            continue
+        attr = node.func.attr
+        base = _dotted(node.func.value) or ""
+        base_tail = base.rsplit(".", 1)[-1].lstrip("_")
+        bad = (
+            (attr in _WALLCLOCK_TIME_ATTRS and base_tail == "time")
+            or (attr in _WALLCLOCK_DT_ATTRS and base_tail in ("datetime", "date"))
+        )
+        if bad and not _suppressed(lines, node.lineno, "wall-clock"):
+            out.append(Violation(
+                path, node.lineno, "KV005",
+                f"`{base}.{attr}()` in a virtual-clock module — scheduler "
+                f"and simulator time must come from the replay clock, "
+                f"never the host's wall clock",
+            ))
+    return out
+
+
+# --------------------------------------------------------------------------
+# KV006 jit-shape-branch
+# --------------------------------------------------------------------------
+def _jitted_function_names(tree: ast.Module) -> set[str]:
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if _is_partial(node.value.func) and node.value.args:
+                inner = _dotted(node.value.args[0])
+                if inner is not None:
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            partial_of[tgt.id] = inner.rsplit(".", 1)[-1]
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func) and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Call) and _is_partial(arg.func) and arg.args:
+                d = _dotted(arg.args[0])
+                if d is not None:
+                    names.add(d.rsplit(".", 1)[-1])
+            else:
+                d = _dotted(arg)
+                if d is not None:
+                    short = d.rsplit(".", 1)[-1]
+                    names.add(partial_of.get(short, short))
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec):
+                    names.add(node.name)
+                elif isinstance(dec, ast.Call) and (
+                    _is_jax_jit(dec.func)
+                    or (_is_partial(dec.func) and dec.args
+                        and _is_jax_jit(dec.args[0]))
+                ):
+                    names.add(node.name)
+    return names
+
+
+def _shape_dependent(test) -> bool:
+    for node in ast.walk(test):
+        if isinstance(node, ast.Attribute) and node.attr in ("shape", "ndim"):
+            return True
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "len"
+        ):
+            return True
+    return False
+
+
+def check_jit_shape_branch(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    del registry
+    jitted = _jitted_function_names(tree)
+    if not jitted:
+        return []
+    out: list[Violation] = []
+    for func in ast.walk(tree):
+        if not isinstance(func, ast.FunctionDef) or func.name not in jitted:
+            continue
+        for node in ast.walk(func):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if _shape_dependent(node.test) and not _suppressed(
+                lines, node.lineno, "jit-shape-branch"
+            ):
+                out.append(Violation(
+                    path, node.lineno, "KV006",
+                    f"shape-dependent Python branch inside jitted "
+                    f"`{func.name}` — compiles once per shape (silent "
+                    f"recompile hazard); bucket the shapes and mark the "
+                    f"line `# lint: jit-shape-branch-ok` if deliberate",
+                ))
+    return out
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+RULES = (
+    check_donated_reuse,
+    check_lru_cache_hashable,
+    check_action_exhaustive,
+    check_pin_paired,
+    check_wall_clock,
+    check_jit_shape_branch,
+)
+
+
+def _gather(paths) -> list[str]:
+    files: list[str] = []
+    for path in paths:
+        if os.path.isfile(path) and path.endswith(".py"):
+            files.append(path)
+            continue
+        for root, dirs, names in os.walk(path):
+            dirs[:] = [
+                d for d in dirs if not d.startswith(".") and d != "__pycache__"
+            ]
+            files.extend(
+                os.path.join(root, n) for n in names if n.endswith(".py")
+            )
+    return sorted(files)
+
+
+def run(paths) -> list[Violation]:
+    """Lint ``paths`` (files or directories); returns all violations."""
+    files = _gather(paths)
+    registry: dict[str, bool] = {}
+    parsed: list[tuple[str, ast.Module, list[str]]] = []
+    out: list[Violation] = []
+    for f in files:
+        try:
+            with open(f, encoding="utf-8") as fh:
+                src = fh.read()
+            tree = ast.parse(src, filename=f)
+        except SyntaxError as e:
+            out.append(Violation(f, e.lineno or 0, "KV000",
+                                 f"syntax error: {e.msg}"))
+            continue
+        parsed.append((f, tree, src.splitlines()))
+        _index_dataclasses(tree, registry)
+    for f, tree, lines in parsed:
+        for rule in RULES:
+            out.extend(rule(f, tree, lines, registry))
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific AST lint (KV001-KV006)",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    args = ap.parse_args(argv)
+    paths = args.paths or [p for p in _DEFAULT_PATHS if os.path.isdir(p)]
+    if not paths:
+        print("lint: no paths to check", file=sys.stderr)
+        return 2
+    violations = run(paths)
+    for v in violations:
+        print(v)
+    n_files = len(_gather(paths))
+    if violations:
+        print(f"\n{len(violations)} violation(s) in {n_files} file(s)")
+        return 1
+    print(f"clean: {n_files} file(s), {len(RULES)} rules")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

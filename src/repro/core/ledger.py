@@ -64,11 +64,16 @@ class TransferLedger:
         self.cancelled = 0
         self.dropped = 0
         self.completed_bytes: dict[Channel, int] = {c: 0 for c in Channel}
+        # optional lifecycle observer (repro.analysis.invariants wires its
+        # LedgerAuditor here under REPRO_KVSAN=1); None costs nothing
+        self.observer = None
 
     # ------------------------------------------------------------ lifecycle
     def open(self, rec: TransferRecord) -> TransferRecord:
         assert rec.action_id not in self._open, rec.action_id
         self._open[rec.action_id] = rec
+        if self.observer is not None:
+            self.observer.on_open(rec)
         return rec
 
     def complete(self, action_id: int) -> TransferRecord | None:
@@ -76,6 +81,8 @@ class TransferLedger:
         tolerated (the record may have been cancelled, or dropped with a
         failed replica, while the runtime's completion was in flight)."""
         rec = self._open.pop(action_id, None)
+        if self.observer is not None:
+            self.observer.on_complete(action_id, rec)
         if rec is not None:
             self.completed += 1
             self.completed_bytes[rec.channel] += rec.nbytes
@@ -83,6 +90,8 @@ class TransferLedger:
 
     def cancel(self, action_id: int) -> TransferRecord | None:
         rec = self._open.pop(action_id, None)
+        if self.observer is not None:
+            self.observer.on_cancel(action_id, rec)
         if rec is not None:
             self.cancelled += 1
         return rec
@@ -93,6 +102,8 @@ class TransferLedger:
         for r in drop:
             del self._open[r.action_id]
         self.dropped += len(drop)
+        if drop and self.observer is not None:
+            self.observer.on_drop(drop)
         return drop
 
     def drop_replica(self, replica: int) -> list[TransferRecord]:
@@ -101,6 +112,8 @@ class TransferLedger:
         for r in drop:
             del self._open[r.action_id]
         self.dropped += len(drop)
+        if drop and self.observer is not None:
+            self.observer.on_drop(drop)
         return drop
 
     # -------------------------------------------------------------- queries

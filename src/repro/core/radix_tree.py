@@ -19,6 +19,7 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field
 
+from repro.analysis import kvsan
 from repro.core.types import (
     CPU_EVICTION_ORDER,
     GPU_EVICTION_ORDER,
@@ -63,6 +64,10 @@ class TypedRadixTree:
         self._clock = itertools.count(1)
         # program_id -> list of nodes along its path (for label re-stamping)
         self._program_nodes: dict[str, list[RadixNode]] = {}
+        # kvsan strict mode: refcount underflow and unbalanced pin/unpin
+        # become hard errors instead of being clamped away silently
+        self._strict = kvsan.enabled()
+        self._pin_depth: dict[str, int] = {}
 
     # ------------------------------------------------------------- lookup
     def match_prefix(self, tokens: list[int]) -> list[RadixNode]:
@@ -133,14 +138,49 @@ class TypedRadixTree:
             node.label = label
 
     def pin(self, program_id: str) -> None:
-        for node in self._program_nodes.get(program_id, []):
-            node.refcount += 1
+        self._pin_depth[program_id] = self._pin_depth.get(program_id, 0) + 1
+        self.acquire_nodes(self._program_nodes.get(program_id, []))
 
     def unpin(self, program_id: str) -> None:
-        for node in self._program_nodes.get(program_id, []):
+        depth = self._pin_depth.get(program_id, 0)
+        if depth <= 0:
+            if self._strict:
+                raise kvsan.KvsanError(
+                    f"unpin({program_id!r}) without a matching pin — "
+                    f"refcount underflow hidden by the clamp"
+                )
+        else:
+            self._pin_depth[program_id] = depth - 1
+        self.release_nodes(self._program_nodes.get(program_id, []))
+
+    def acquire_nodes(self, nodes) -> None:
+        """Refcount-hold a node chain (a block table, an in-flight reload).
+        Must be balanced by :meth:`release_nodes` on every path."""
+        for node in nodes:
+            node.refcount += 1
+
+    def release_nodes(self, nodes) -> None:
+        """Drop a :meth:`acquire_nodes` hold. Under kvsan an underflow is a
+        hard error; otherwise it clamps at zero (the historical, silently
+        forgiving behaviour)."""
+        for node in nodes:
+            if node.refcount <= 0 and self._strict:
+                raise kvsan.KvsanError(
+                    f"refcount underflow releasing radix node "
+                    f"{node.node_id} (device_page={node.device_page}, "
+                    f"host_page={node.host_page}) — release without a "
+                    f"matching acquire"
+                )
             node.refcount = max(0, node.refcount - 1)
 
     def release_program(self, program_id: str) -> None:
+        if self._strict and self._pin_depth.get(program_id, 0) > 0:
+            raise kvsan.KvsanError(
+                f"release_program({program_id!r}) with "
+                f"{self._pin_depth[program_id]} outstanding pin(s) — an "
+                f"in-flight hold still references the program's chain"
+            )
+        self._pin_depth.pop(program_id, None)
         self._program_nodes.pop(program_id, None)
 
     def program_nodes(self, program_id: str) -> list[RadixNode]:

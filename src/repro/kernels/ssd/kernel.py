@@ -95,7 +95,9 @@ def ssd(
     chunk: int = 128,
     interpret: bool = False,
 ):
-    if Bm.ndim == 4:
+    # rank normalization, not data-dependent control flow: callers pass B/C
+    # as [B,S,1,N] or [B,S,N] and each rank compiles exactly once
+    if Bm.ndim == 4:  # lint: jit-shape-branch-ok
         Bm = Bm[:, :, 0, :]
         Cm = Cm[:, :, 0, :]
     B, S, H, P = x.shape

@@ -85,6 +85,7 @@ class PrefillJob:
     cursor: int = 0              # suffix tokens prefilled so far
     chunks_run: int = 0
     first_token: int | None = None
+    kvsan_hold: int | None = None   # sanitizer hold token on new_pages
 
     @property
     def done(self) -> bool:
@@ -106,7 +107,9 @@ def _chunk_prefill_impl(model, ctx, params, k_pages, v_pages, prefix_idx,
     from repro.serving.kvpool import gather_token_run, scatter_token_run
 
     prefix = None
-    if prefix_idx.shape[0]:
+    # shape branch is deliberate bucketing: prefix_idx is padded to the
+    # table bucket, so this compiles once per bucket, not per length
+    if prefix_idx.shape[0]:  # lint: jit-shape-branch-ok
         pk, pv = gather_token_run(k_pages, v_pages, prefix_idx)
         prefix = {"k": pk[:, None], "v": pv[:, None]}           # [L,1,Sp,KH,HD]
     logits, cache = model.prefill(
@@ -224,6 +227,11 @@ class Engine:
             n_host_pages=n_host_pages,
         )
         self.tree = TypedRadixTree(page_tokens)
+        if self.pool._san is not None:
+            # give the sanitizer the node graph (pin checks) and the live
+            # block-table / scratch references (hold + leak checks)
+            self.pool._san.tree = self.tree
+            self.pool._san.add_reachable_cb(self._kvsan_reachable)
         self.lengths = np.zeros(max_slots, np.int32)
         self.last_token = np.zeros(max_slots, np.int32)
         # token whose KV currently occupies position lengths[sid]-1 — what a
@@ -258,6 +266,23 @@ class Engine:
         # metrics
         self.steps = 0
         self.evicted_pages = {"gpu": 0, "cpu": 0}
+
+    # ------------------------------------------------------------- kvsan
+    def _kvsan_reachable(self):
+        """Live page references outside the radix tree, for the sanitizer:
+        per-slot scratch pages and every resident block table."""
+        out = []
+        for p in getattr(self, "_scratch_pages", []):
+            out.append(("dev", p, "scratch"))
+        for slot in self.slots.values():
+            pid = slot.request.program_id
+            for p in slot.table:
+                out.append(("dev", p, f"block table of {pid}"))
+        return out
+
+    def _san_scope(self, tag: str) -> None:
+        if self.pool._san is not None:
+            self.pool._san.set_scope(tag)
 
     # ------------------------------------------------------------ admission
     def has_slot(self) -> bool:
@@ -330,6 +355,7 @@ class Engine:
         assert self._free_slots, "no free decode slots"
         assert len(req.tokens) + req.max_new_tokens <= self.max_seq
         pid = req.program_id
+        self._san_scope(f"submit:{pid}")
 
         # 1. promote any host-resident prefix pages back to the device
         reloaded = self._reload_prefix(req.tokens)
@@ -347,8 +373,7 @@ class Engine:
         # different program (released in _finish)
         self.tree.pin(pid)
         if not self.dense_slots:
-            for node in nodes:
-                node.refcount += 1
+            self.tree.acquire_nodes(nodes)
 
         prefix = None
         if pages:
@@ -399,8 +424,7 @@ class Engine:
             except RuntimeError:
                 for page in new_pages:
                     self.pool.free_device(page)
-                for node in nodes:
-                    node.refcount = max(0, node.refcount - 1)
+                self.tree.release_nodes(nodes)
                 self.tree.unpin(pid)
                 self._free_slots.append(sid)
                 raise
@@ -427,6 +451,7 @@ class Engine:
         assert self._free_slots, "no free decode slots"
         assert len(req.tokens) + req.max_new_tokens <= self.max_seq
         pid = req.program_id
+        self._san_scope(f"begin_submit:{pid}")
 
         reloaded = self._reload_prefix(req.tokens)
         nodes = self.tree.match_prefix(req.tokens)
@@ -436,8 +461,7 @@ class Engine:
         assert suffix, "request must extend its cached prefix"
 
         self.tree.pin(pid)
-        for node in nodes:
-            node.refcount += 1
+        self.tree.acquire_nodes(nodes)
         sid = self._free_slots.pop()
         T = self.page_tokens
         new_pages: list[int] = []
@@ -447,11 +471,17 @@ class Engine:
         except RuntimeError:
             for page in new_pages:
                 self.pool.free_device(page)
-            for node in nodes:
-                node.refcount = max(0, node.refcount - 1)
+            self.tree.release_nodes(nodes)
             self.tree.unpin(pid)
             self._free_slots.append(sid)
             raise
+        hold = None
+        if self.pool._san is not None:
+            # the staged suffix pages belong to this job until the final
+            # chunk installs them into a slot's block table
+            hold = self.pool._san.add_hold(
+                "dev", new_pages, f"prefill job:{pid}"
+            )
         return PrefillJob(
             request=req,
             slot_id=sid,
@@ -461,6 +491,7 @@ class Engine:
             prefix_pages=pages,
             prefix_nodes=nodes,
             new_pages=new_pages,
+            kvsan_hold=hold,
         )
 
     def prefill_step(self, job: PrefillJob, token_budget: int | None = None) -> bool:
@@ -530,6 +561,11 @@ class Engine:
         req = job.request
         sid = job.slot_id
         length = len(req.tokens)
+        if job.kvsan_hold is not None:
+            # ownership moves to the slot's block table (registered via
+            # the engine's reachability callback)
+            self.pool._san.drop_hold(job.kvsan_hold)
+            job.kvsan_hold = None
         self.slots[sid] = _Slot(
             request=req,
             slot_id=sid,
@@ -552,10 +588,13 @@ class Engine:
         written pages go back to the free list (pages are always fully
         rewritten before anything attends over them)."""
         assert not job.done, "job already installed; retire via decode"
+        self._san_scope(f"cancel_prefill:{job.request.program_id}")
+        if job.kvsan_hold is not None:
+            self.pool._san.drop_hold(job.kvsan_hold)
+            job.kvsan_hold = None
         for page in job.new_pages:
             self.pool.free_device(page)
-        for node in job.prefix_nodes:
-            node.refcount = max(0, node.refcount - 1)
+        self.tree.release_nodes(job.prefix_nodes)
         self.tree.unpin(job.request.program_id)
         self._free_slots.append(job.slot_id)
         self.lengths[job.slot_id] = 0
@@ -573,8 +612,7 @@ class Engine:
         shorter cached prefix instead of failing the submit.
         """
         chain = self.tree.match_prefix_any_tier(tokens)
-        for node in chain:
-            node.refcount += 1
+        self.tree.acquire_nodes(chain)
         n = 0
         try:
             for node in chain:
@@ -591,8 +629,7 @@ class Engine:
                 node.device_page = dp
                 n += 1
         finally:
-            for node in chain:
-                node.refcount = max(0, node.refcount - 1)
+            self.tree.release_nodes(chain)
         return n
 
     def _alloc_decode_page(self) -> int:
@@ -710,6 +747,14 @@ class Engine:
             pos = int(self.lengths[sid]) - 1    # this step's write position
             if pos // T == len(slot.table):     # tail page rolled over
                 slot.table.append(self._alloc_decode_page())
+        san = self.pool._san
+        if san is not None:
+            san.set_scope(f"step#{self.steps}")
+            for sid, slot in self.slots.items():
+                san.check_table(
+                    slot.table, int(self.lengths[sid]) - 1,
+                    slot.request.program_id,
+                )
         # tables are padded to a bucketed page count so jit recompiles at
         # most pages_per_slot / bucket times per engine, while short
         # contexts still attend over far fewer positions than max_seq
@@ -749,10 +794,17 @@ class Engine:
         slot data back into freshly-allocated pool pages.
         """
         req = slot.request
+        self._san_scope(f"finish:{req.program_id}")
         all_tokens = req.tokens + slot.produced[:-1]  # last token has no KV yet
         T = self.page_tokens
         n_full = len(all_tokens) // T
         have = len(self.tree.match_prefix(all_tokens))
+        # retire the slot FIRST: the duplicate/tail frees below release
+        # pages its block table still lists, and the sanitizer (rightly)
+        # treats freeing a page under a live table as an eviction bug
+        self.slots.pop(slot.slot_id)
+        self._free_slots.append(slot.slot_id)
+        self.lengths[slot.slot_id] = 0
         if self.dense_slots:
             new_pages = []
             for p in range(have, n_full):
@@ -778,8 +830,7 @@ class Engine:
             if len(all_tokens) % T and n_full < len(slot.table):
                 self.pool.free_device(slot.table[n_full])
             covered = n_full * T
-            for node in slot.prefix_nodes:
-                node.refcount = max(0, node.refcount - 1)
+            self.tree.release_nodes(slot.prefix_nodes)
         self.tree.unpin(req.program_id)  # release the pages pinned at submit
         self.tree.insert_chain(
             all_tokens[:covered], new_pages, req.program_id, TypeLabel.BUSY
@@ -791,9 +842,6 @@ class Engine:
         # _alloc_decode_page.
         while self._cache_over_budget() and self._evict_one_cache_page():
             pass
-        self.slots.pop(slot.slot_id)
-        self._free_slots.append(slot.slot_id)
-        self.lengths[slot.slot_id] = 0
         return Completion(
             program_id=req.program_id,
             output_tokens=slot.produced,
@@ -868,6 +916,7 @@ class Engine:
     # --------------------------------------------- MORI program-level verbs
     def offload_program(self, pid: str) -> int:
         """GPU -> host for all of the program's device pages. Returns count."""
+        self._san_scope(f"offload_program:{pid}")
         n = 0
         for node in reversed(self.tree.program_nodes(pid)):  # leaves first
             if node.device_page is not None and node.refcount == 0:
@@ -889,9 +938,9 @@ class Engine:
         just-reloaded, LRU-stale nodes of this very program as victims —
         a reload that silently undoes itself while billing full PCIe
         traffic."""
+        self._san_scope(f"reload_program:{pid}")
         nodes = self.tree.program_nodes(pid)
-        for node in nodes:
-            node.refcount += 1
+        self.tree.acquire_nodes(nodes)
         n = 0
         try:
             for node in nodes:
@@ -904,11 +953,11 @@ class Engine:
                     node.device_page = dp
                     n += 1
         finally:
-            for node in nodes:
-                node.refcount = max(0, node.refcount - 1)
+            self.tree.release_nodes(nodes)
         return n
 
     def discard_program(self, pid: str, tier: Tier) -> None:
+        self._san_scope(f"discard_program:{pid}:{tier.value}")
         for node in reversed(self.tree.program_nodes(pid)):
             if node.refcount > 0:
                 continue

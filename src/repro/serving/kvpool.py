@@ -21,6 +21,8 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import kvsan
+
 
 def scatter_token_run(k_arr, v_arr, page_idx, k_tokens, v_tokens, page_tokens):
     """Scatter a token run ``[L, S, KH, HD]`` into pool pages in ONE
@@ -97,6 +99,15 @@ class PagePool:
         self.n_host_pages = n_host_pages
         self.offload_bytes = 0
         self.reload_bytes = 0
+        # page-lifetime sanitizer (None unless REPRO_KVSAN=1): every
+        # alloc/free/read/write verb below reports to it
+        self._san = kvsan.maybe_sanitizer(
+            n_device_pages=n_device_pages,
+            n_host_pages=n_host_pages,
+            page_tokens=page_tokens,
+        )
+        if self._san is not None:
+            self._san.pool = self
 
     @property
     def page_bytes(self) -> int:
@@ -110,15 +121,25 @@ class PagePool:
         return len(self._free_host)
 
     def alloc_device(self) -> int | None:
-        return self._free_dev.pop() if self._free_dev else None
+        page = self._free_dev.pop() if self._free_dev else None
+        if page is not None and self._san is not None:
+            self._san.on_alloc("dev", page)
+        return page
 
     def alloc_host(self) -> int | None:
-        return self._free_host.pop() if self._free_host else None
+        page = self._free_host.pop() if self._free_host else None
+        if page is not None and self._san is not None:
+            self._san.on_alloc("host", page)
+        return page
 
     def free_device(self, page: int) -> None:
+        if self._san is not None:
+            self._san.on_free("dev", page)
         self._free_dev.append(page)
 
     def free_host(self, page: int) -> None:
+        if self._san is not None:
+            self._san.on_free("host", page)
         self._free_host.append(page)
 
     # -------------------------------------------------------------- writes
@@ -148,11 +169,15 @@ class PagePool:
         path appends *inside* jit (``Model.decode_paged`` commits all
         layers in one batched scatter); this method serves tests and
         host-driven fixups."""
+        if self._san is not None:
+            self._san.on_append("dev", page, offset)
         self.k = self.k.at[:, page, offset].set(k_tok.astype(self.k.dtype))
         self.v = self.v.at[:, page, offset].set(v_tok.astype(self.v.dtype))
 
     def write_device_page(self, page: int, k_tokens, v_tokens) -> None:
         """k_tokens/v_tokens: [L, t<=page_tokens, KH, HD]."""
+        if self._san is not None:
+            self._san.on_write("dev", page)
         t = k_tokens.shape[1]
         self.k = self.k.at[:, page, :t].set(k_tokens.astype(self.k.dtype))
         self.v = self.v.at[:, page, :t].set(v_tokens.astype(self.v.dtype))
@@ -168,12 +193,18 @@ class PagePool:
         """
         if not pages:
             return
+        if self._san is not None:
+            for page in pages:
+                self._san.on_write("dev", page)
         self.k, self.v = scatter_token_run(
             self.k, self.v, pages, k_tokens, v_tokens, self.page_tokens
         )
 
     def read_device_pages(self, pages: list[int]):
         """Gather pages -> [L, n*page_tokens, KH, HD] (slot assembly)."""
+        if self._san is not None:
+            for page in pages:
+                self._san.on_read("dev", page)
         return gather_token_run(self.k, self.v, pages)
 
     # ----------------------------------------------------------- transfers
@@ -197,9 +228,13 @@ class PagePool:
         speculative, and a cancelled transfer must leave no round-trip
         trace in :class:`PoolStats`. The committing caller bills via
         :meth:`bill_offload` (the atomic verbs below do it themselves)."""
+        if self._san is not None:
+            self._san.on_read("dev", dev_page)
         hp = self.alloc_host()
         if hp is None:
             return None
+        if self._san is not None:
+            self._san.on_write("host", hp)
         self.host_k[:, hp] = self._encode_host(self.k[:, dev_page])
         self.host_v[:, hp] = self._encode_host(self.v[:, dev_page])
         return hp
@@ -207,9 +242,13 @@ class PagePool:
     def copy_page_to_device(self, host_page: int) -> int | None:
         """Stage one host page into a device page *without* freeing the
         host copy (streamed-reload primitive, mirror of the above)."""
+        if self._san is not None:
+            self._san.on_read("host", host_page)
         dp = self.alloc_device()
         if dp is None:
             return None
+        if self._san is not None:
+            self._san.on_write("dev", dp)
         self.k = self.k.at[:, dp].set(
             jnp.asarray(self._decode_host(self.host_k[:, host_page]), self.k.dtype)
         )

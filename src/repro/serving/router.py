@@ -80,6 +80,8 @@ import math
 import time
 from dataclasses import dataclass, field
 
+from repro.analysis import kvsan
+from repro.analysis.invariants import ControlPlaneChecker
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
 from repro.core.actions import (
     Action,
@@ -259,6 +261,12 @@ class MoriRouter:
             TierCapacity(gpu_cap, cpu_cap, ssd_capacity_bytes),
             config,
         )
+        # control-plane invariant checker (REPRO_KVSAN=1 only): audits the
+        # ledger's record lifecycle inline and sweeps scheduler occupancy /
+        # placement consistency at every tick
+        self._checker = (
+            ControlPlaneChecker(self.sched) if kvsan.enabled() else None
+        )
         self.metrics = RouterMetrics()
         self.record_plans = record_plans
         self.action_log: list[Action] = []
@@ -351,6 +359,28 @@ class MoriRouter:
         free = self.engines[replica].free_slot_count()
         return max(0, free - queued), len(self._pump_slots[replica]) + queued
 
+    def _kvsan_check(self, now: float) -> None:
+        """Tick-granularity sanity sweep (no-op unless REPRO_KVSAN=1):
+        control-plane occupancy/placement plus each pool's structural
+        page invariants."""
+        if self._checker is not None:
+            self._checker.check(now)
+        for i, eng in enumerate(self.engines):
+            san = getattr(eng.pool, "_san", None)
+            if san is not None:
+                san.verify(f"router tick t={now:.3f}, replica {i}")
+
+    def _kvsan_end_of_replay(self) -> None:
+        """Replay drained: the ledger must be empty and every allocated
+        page reachable (anything else is a leak)."""
+        if self._checker is not None:
+            self._checker.assert_drained()
+        for i, eng in enumerate(self.engines):
+            san = getattr(eng.pool, "_san", None)
+            if san is not None:
+                san.verify(f"end of replay, replica {i}")
+                san.check_leaks(f"end of replay, replica {i}")
+
     def _record_ttft(self, pid: str, step_idx: int) -> None:
         """First token just landed for (pid, step): close its TTFT sample."""
         t0 = self._ttft_start.pop((pid, step_idx), None)
@@ -400,6 +430,8 @@ class MoriRouter:
         self.metrics.peak_inflight_bytes = max(
             self.metrics.peak_inflight_bytes, self.sched.ledger.in_flight_bytes()
         )
+        if self._checker is not None:
+            self._checker.check(plan.now)
 
     def _exec_forward(self, act: Forward, now: float) -> None:
         if act.source_tier in (Tier.CPU, Tier.SSD):
@@ -567,6 +599,7 @@ class MoriRouter:
                 self._advance_planes(now)
                 self.apply_plan(self.sched.tick(now))
                 drain(now, can_step(now))
+                self._kvsan_check(now)
                 continue
             # a live event heap means new work (and new transfers) can
             # still start: any prior drain deadline is stale, re-derive it
@@ -578,6 +611,7 @@ class MoriRouter:
                 self._advance_planes(next_tick)
                 self.apply_plan(self.sched.tick(next_tick))
                 drain(next_tick, can_step(next_tick))
+                self._kvsan_check(next_tick)
                 next_tick += tick
             self._advance_planes(now)
             fn(now)
@@ -593,6 +627,7 @@ class MoriRouter:
                     )
             else:
                 stalled, last_progress = 0, cur
+        self._kvsan_end_of_replay()
         self._push = None
         self._rs = None
         return self.metrics

@@ -35,6 +35,7 @@ gracefully by committing the pages it has staged so far.
 """
 from __future__ import annotations
 
+import contextlib
 import heapq
 import itertools
 from typing import Callable
@@ -70,6 +71,20 @@ class _PagedStream:
         # protect the nodes from engine-level eviction while the copy is
         # in flight (balanced by unpin in commit/abort)
         tree.pin(pid)
+        # kvsan: the source pages of an in-flight CopyJob must stay valid
+        # until commit/abort — hold them (and each staged page as it is
+        # copied) so a buggy free mid-stream is caught at the free site
+        self._san = engine.pool._san
+        self._holds: list[int] = []
+        if self._san is not None:
+            src_tier = "dev" if kind == "offload" else "host"
+            src_pages = [
+                n.device_page if kind == "offload" else n.host_page
+                for n in self.nodes
+            ]
+            self._holds.append(
+                self._san.add_hold(src_tier, src_pages, f"{kind} src:{pid}")
+            )
 
     @property
     def n_units(self) -> int:
@@ -89,6 +104,10 @@ class _PagedStream:
             hp = pool.copy_page_to_host(node.device_page)
             if hp is not None:
                 self.copied.append((node, hp))
+                if self._san is not None:
+                    self._holds.append(self._san.add_hold(
+                        "host", [hp], f"offload staging:{self.pid}"
+                    ))
         else:
             if node.host_page is None:
                 return
@@ -103,10 +122,39 @@ class _PagedStream:
             dp = pool.copy_page_to_device(node.host_page)
             if dp is not None:
                 self.copied.append((node, dp))
+                if self._san is not None:
+                    self._holds.append(self._san.add_hold(
+                        "dev", [dp], f"reload staging:{self.pid}"
+                    ))
+
+    def _settle_holds(self) -> None:
+        """The stream is settling (commit or abort): its frees below are
+        legitimate, so release every sanitizer hold first."""
+        if self._san is not None:
+            self._san.set_scope(f"{self.kind} settle:{self.pid}")
+            for tok in self._holds:
+                self._san.drop_hold(tok)
+            self._holds = []
 
     def commit(self) -> int:
         """All pages landed: atomically retire the source copies."""
+        self._settle_holds()
         pool = self.engine.pool
+        n = 0
+        # the sources retired below are pinned by *this stream's own*
+        # tree.pin (released right after the loop) — tell the sanitizer
+        # these frees are the pin owner's custody transfer, not eviction
+        own = (
+            self._san.owned_pin_frees(f"{self.kind} commit:{self.pid}")
+            if self._san is not None
+            else contextlib.nullcontext()
+        )
+        with own:
+            n = self._commit_pages(pool)
+        self.engine.tree.unpin(self.pid)
+        return n
+
+    def _commit_pages(self, pool) -> int:
         n = 0
         for node, page in self.copied:
             if self.kind == "offload":
@@ -138,13 +186,13 @@ class _PagedStream:
                     n += 1
                 else:
                     pool.free_device(page)
-        self.engine.tree.unpin(self.pid)
         return n
 
     def abort(self) -> int:
         """Mid-stream cancel: discard the staged partial page set. The
         source pages were never freed, so the program's KV is intact
         exactly where it was."""
+        self._settle_holds()
         pool = self.engine.pool
         for _node, page in self.copied:
             if self.kind == "offload":

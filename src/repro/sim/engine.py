@@ -43,6 +43,7 @@ from repro.core.actions import (
     Migrate,
     Offload,
     PlacementPlan,
+    SetLabel,
 )
 from repro.core.ledger import Channel, channel_for
 from repro.core.transfers import CopyJob, TransferChannels
@@ -336,6 +337,10 @@ class Simulation:
                 self._exec_cancel(act)
             elif isinstance(act, Migrate):
                 self._exec_migrate(act)
+            elif isinstance(act, SetLabel):
+                pass  # no block level to restamp in the simulator
+            else:
+                raise ValueError(f"unhandled plan action: {act!r}")
 
     def _exec_forward(self, act: Forward) -> None:
         req = self._pending.get(act.pid)

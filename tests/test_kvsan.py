@@ -1,0 +1,389 @@
+"""kvsan: page-lifetime sanitizer + control-plane invariant checker.
+
+Covers the PR's acceptance battery:
+
+* pool-level violations become hard :class:`KvsanError`\\ s under
+  ``REPRO_KVSAN=1`` — double-free, read/write-after-free, append past a
+  page boundary, free of a page a live block table still references;
+* the historical silent bugs are now errors: ``PagePool.free_device``
+  accepting the same page twice, ``TypedRadixTree.unpin``'s
+  ``max(0, ...)`` clamp hiding refcount underflow;
+* structural ``verify`` / ``check_leaks`` sweeps catch corruption the
+  per-verb hooks cannot see;
+* the ledger auditor + control-plane checker raise on lifecycle and
+  conservation violations, tolerate the documented complete-after-cancel
+  race;
+* a full router replay (async pump + chunked prefill) runs *clean* with
+  everything armed — and the fuzz harness's machinery round-trips a
+  failure into a JSON artifact.
+
+All tests arm the sanitizer per-test via monkeypatch; nothing leaks into
+the rest of the suite (kvsan is read at pool/tree construction time).
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.analysis import kvsan
+from repro.analysis.invariants import InvariantError, LedgerAuditor
+from repro.analysis.kvsan import KvsanError
+from repro.core.ledger import Channel, TransferLedger, TransferRecord
+from repro.core.radix_tree import TypedRadixTree
+from repro.core.types import Tier, TypeLabel
+from repro.serving.kvpool import PagePool
+
+
+@pytest.fixture
+def arm(monkeypatch):
+    monkeypatch.setenv(kvsan.ENV_VAR, "1")
+
+
+@pytest.fixture
+def pool(arm):
+    return PagePool(
+        layers=2, kv_heads=2, head_dim=8, page_tokens=4,
+        n_device_pages=8, n_host_pages=4,
+    )
+
+
+def _rec(action_id=1, pid="p0", kind="offload"):
+    return TransferRecord(
+        action_id=action_id, pid=pid, replica=0, kind=kind,
+        channel=Channel.PCIE, nbytes=1024, src_tier=Tier.GPU,
+        dst_tier=Tier.CPU, opened_at=0.0,
+    )
+
+
+class TestPoolLifecycle:
+    def test_off_by_default(self, monkeypatch):
+        monkeypatch.delenv(kvsan.ENV_VAR, raising=False)
+        pool = PagePool(layers=1, kv_heads=1, head_dim=4, page_tokens=2,
+                        n_device_pages=2, n_host_pages=2)
+        assert pool._san is None
+        # the historical bug: double-free silently accepted when unarmed
+        p = pool.alloc_device()
+        pool.free_device(p)
+        pool.free_device(p)
+        assert pool._free_dev.count(p) == 2    # corruption, undetected
+
+    def test_double_free_device(self, pool):
+        p = pool.alloc_device()
+        pool.free_device(p)
+        with pytest.raises(KvsanError, match="double-free of dev page"):
+            pool.free_device(p)
+
+    def test_double_free_host(self, pool):
+        p = pool.alloc_host()
+        pool.free_host(p)
+        with pytest.raises(KvsanError, match="double-free of host page"):
+            pool.free_host(p)
+
+    def test_free_list_corruption_surfaces_at_alloc(self, pool):
+        # simulate the *downstream* symptom: a page pushed onto the free
+        # list behind the sanitizer's back gets handed out while allocated
+        p = pool.alloc_device()
+        pool._free_dev.append(p)
+        with pytest.raises(KvsanError, match="free-list corruption"):
+            for _ in range(pool.n_device_pages + 1):
+                pool.alloc_device()
+
+    def test_write_after_free(self, pool):
+        import numpy as np
+        p = pool.alloc_device()
+        pool.free_device(p)
+        tok = np.zeros((pool.layers, pool.kv_heads, pool.head_dim))
+        with pytest.raises(KvsanError, match="write-after-free"):
+            pool.write_device_page(p, tok[:, None], tok[:, None])
+
+    def test_read_after_free(self, pool):
+        p = pool.alloc_device()
+        pool.free_device(p)
+        with pytest.raises(KvsanError, match="read-after-free"):
+            pool.read_device_pages([p])
+
+    def test_append_past_page_boundary(self, pool):
+        import numpy as np
+        p = pool.alloc_device()
+        tok = np.zeros((pool.layers, pool.kv_heads, pool.head_dim))
+        pool.append_token(p, pool.page_tokens - 1, tok, tok)   # last slot ok
+        with pytest.raises(KvsanError, match="append past the tail page"):
+            pool.append_token(p, pool.page_tokens, tok, tok)
+
+    def test_free_under_hold(self, pool):
+        p = pool.alloc_device()
+        tok = pool._san.add_hold("dev", [p], "in-flight copy")
+        with pytest.raises(KvsanError, match="while held by"):
+            pool.free_device(p)
+        pool._san.drop_hold(tok)
+        pool.free_device(p)                                    # now legal
+
+    def test_free_under_block_table(self, pool):
+        p = pool.alloc_device()
+        pool._san.add_reachable_cb(lambda: [("dev", p, "block table of p0")])
+        with pytest.raises(KvsanError, match="eviction out from under"):
+            pool.free_device(p)
+
+    def test_check_table_append_past_tail(self, pool):
+        p = pool.alloc_device()
+        san = pool._san
+        san.check_table([p], pool.page_tokens - 1, "p0")        # in range
+        with pytest.raises(KvsanError, match="past the tail page"):
+            san.check_table([p], pool.page_tokens, "p0")
+
+    def test_verify_conservation(self, pool):
+        pool.alloc_device()
+        pool._san.verify("healthy")                             # clean
+        stolen = pool._free_dev.pop()
+        with pytest.raises(KvsanError, match="conservation broken"):
+            pool._san.verify("after theft")
+        pool._free_dev.append(stolen)
+        pool._free_dev.append(stolen)
+        with pytest.raises(KvsanError, match="duplicates"):
+            pool._san.verify("after dup")
+
+    def test_check_leaks(self, pool):
+        p = pool.alloc_device()
+        with pytest.raises(KvsanError, match="leaked dev page"):
+            pool._san.check_leaks("end of replay")
+        tok = pool._san.add_hold("dev", [p], "slot")
+        pool._san.check_leaks("end of replay")                  # reachable now
+        pool._san.drop_hold(tok)
+
+
+class TestRadixStrictMode:
+    def test_unpin_without_pin(self, arm):
+        t = TypedRadixTree(page_tokens=2)
+        t.insert_chain([0, 1], [0], "p", TypeLabel.BUSY)
+        with pytest.raises(KvsanError, match="without a matching pin"):
+            t.unpin("p")
+
+    def test_unpin_clamp_hides_underflow_when_unarmed(self, monkeypatch):
+        monkeypatch.delenv(kvsan.ENV_VAR, raising=False)
+        t = TypedRadixTree(page_tokens=2)
+        nodes = t.insert_chain([0, 1], [0], "p", TypeLabel.BUSY)
+        t.unpin("p")                       # historical behaviour: clamped
+        assert nodes[0].refcount == 0
+
+    def test_release_nodes_underflow(self, arm):
+        t = TypedRadixTree(page_tokens=2)
+        nodes = t.insert_chain([0, 1], [0], "p", TypeLabel.BUSY)
+        t.acquire_nodes(nodes)
+        t.release_nodes(nodes)
+        with pytest.raises(KvsanError, match="refcount underflow"):
+            t.release_nodes(nodes)
+
+    def test_release_program_with_outstanding_pin(self, arm):
+        t = TypedRadixTree(page_tokens=2)
+        t.insert_chain([0, 1], [0], "p", TypeLabel.BUSY)
+        t.pin("p")
+        with pytest.raises(KvsanError, match="outstanding pin"):
+            t.release_program("p")
+        t.unpin("p")
+        t.release_program("p")                                  # now legal
+
+    def test_free_while_node_pinned(self, pool, arm):
+        t = TypedRadixTree(page_tokens=pool.page_tokens)
+        pool._san.tree = t
+        p = pool.alloc_device()
+        t.insert_chain(list(range(pool.page_tokens)), [p], "p", TypeLabel.BUSY)
+        t.pin("p")
+        with pytest.raises(KvsanError, match="still pins it"):
+            pool.free_device(p)
+        # the pin owner itself may retire the page (offload-commit custody)
+        with pool._san.owned_pin_frees("offload commit:p"):
+            pool.free_device(p)
+        t.unpin("p")
+
+
+class TestLedgerAuditor:
+    def _armed_ledger(self):
+        led = TransferLedger()
+        led.observer = LedgerAuditor()
+        return led
+
+    def test_clean_lifecycle(self):
+        led = self._armed_ledger()
+        led.open(_rec(1))
+        led.complete(1)
+        assert led.completed == 1
+
+    def test_complete_never_opened(self):
+        led = self._armed_ledger()
+        with pytest.raises(InvariantError, match="never opened"):
+            led.complete(99)
+
+    def test_complete_twice(self):
+        led = self._armed_ledger()
+        led.open(_rec(1))
+        led.complete(1)
+        with pytest.raises(InvariantError, match="completed twice"):
+            led.complete(1)
+
+    def test_complete_after_cancel_tolerated(self):
+        led = self._armed_ledger()
+        led.open(_rec(1))
+        led.cancel(1)
+        led.complete(1)          # documented benign race: no raise
+        assert led.cancelled == 1 and led.completed == 0
+
+    def test_cancel_not_open(self):
+        led = self._armed_ledger()
+        with pytest.raises(InvariantError, match="not open"):
+            led.cancel(7)
+
+    def test_reopen_after_close(self):
+        led = self._armed_ledger()
+        led.open(_rec(1))
+        led.complete(1)
+        with pytest.raises(InvariantError, match="reopened"):
+            led.open(_rec(1))
+
+    def test_drop_then_complete_tolerated(self):
+        led = self._armed_ledger()
+        led.open(_rec(1, pid="px"))
+        led.drop_pid("px")
+        led.complete(1)          # ack raced teardown: tolerated
+        assert led.dropped == 1
+
+
+class TestControlPlaneChecker:
+    def _checker(self):
+        from repro.analysis.invariants import ControlPlaneChecker
+        from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
+
+        sched = SCHEDULERS["mori"](
+            1, TierCapacity(1 << 20, 1 << 20, 0), SchedulerConfig()
+        )
+        return sched, ControlPlaneChecker(sched)
+
+    def test_clean_scheduler_passes(self):
+        sched, chk = self._checker()
+        sched.program_arrived("p0", 64, 0.0)
+        sched.request_arrived("p0", 10, 0.0)
+        chk.check(0.0)
+        chk.assert_drained()
+
+    def test_occupancy_conservation(self):
+        sched, chk = self._checker()
+        sched.program_arrived("p0", 64, 0.0)
+        sched.request_arrived("p0", 10, 0.0)
+        sched.replicas[0].gpu_used += 1
+        with pytest.raises(InvariantError, match="conservation broken"):
+            chk.check(1.0)
+
+    def test_placement_table_vs_queue(self):
+        sched, chk = self._checker()
+        sched.program_arrived("p0", 64, 0.0)
+        sched.request_arrived("p0", 10, 0.0)
+        prog = sched.programs["p0"]
+        rep = sched.replicas[prog.replica]
+        rec = rep.gpu.pop("p0")
+        rep.gpu_used -= rec.kv_bytes
+        with pytest.raises(InvariantError, match="not in that queue"):
+            chk.check(1.0)
+
+    def test_open_record_for_unknown_program(self):
+        sched, chk = self._checker()
+        sched.ledger.open(_rec(5, pid="ghost"))
+        with pytest.raises(InvariantError, match="unknown program"):
+            chk.check(0.0)
+
+    def test_assert_drained_lists_open_records(self):
+        sched, chk = self._checker()
+        sched.program_arrived("zzz", 64, 0.0)
+        sched.ledger.open(_rec(5, pid="zzz"))
+        with pytest.raises(InvariantError, match="still open"):
+            chk.assert_drained()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import get_config
+    from repro.models import Model, materialize
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = materialize(Model(cfg).describe(), seed=0)
+    return cfg, params
+
+
+class TestEngineUnderKvsan:
+    def test_eviction_under_live_block_table(self, arm, setup):
+        """Freeing a page a resident slot's table references is the bug
+        class the sanitizer exists for: a hard error at the free site."""
+        from repro.serving import Engine, EngineRequest
+
+        cfg, params = setup
+        eng = Engine(cfg, params, page_tokens=8, n_device_pages=64,
+                     n_host_pages=16, max_slots=2, max_seq=128)
+        eng.submit(EngineRequest("p0", list(range(2, 40)), max_new_tokens=4))
+        slot = next(iter(eng.slots.values()))
+        victim = slot.table[0]
+        # page is pinned via the prefix node and/or referenced by the live
+        # block table — either check must stop the free
+        with pytest.raises(KvsanError, match="still pins it|live decode"):
+            eng.pool.free_device(victim)
+        eng.run_to_completion()
+
+    def test_clean_replay_chunked_async(self, arm, setup):
+        """Everything armed — sanitizer, strict radix, ledger auditor,
+        tick sweeps, end-of-replay leak check — a demoting replay with
+        chunked prefill and async transfers must come out clean."""
+        from repro.core import SchedulerConfig
+        from repro.core.types import ProgramTrace, RequestRecord, TransferCost
+        from repro.serving import Engine, MoriRouter
+
+        cfg, params = setup
+        kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
+                        n_host_pages=128, max_slots=4, max_seq=256)
+        router = MoriRouter(
+            [engine], scheduler="mori",
+            gpu_capacity_bytes=250 * kvb,
+            config=SchedulerConfig(tick_interval_s=1.0),
+            chunked_prefill=True,
+            xfer_cost=TransferCost(pcie_bytes_per_s=64 * kvb / 12.0),
+        )
+        traces = [
+            ProgramTrace(f"p{i}", [
+                RequestRecord(48 + 8 * i, 4, 20.0 if i == 3 else 1.0,
+                              reasoning_wall_s=2.0),
+                RequestRecord(70 + 8 * i, 4, 0.0, reasoning_wall_s=2.0),
+            ])
+            for i in range(4)
+        ]
+        m = router.replay(traces, vocab_size=cfg.vocab_size, max_new_tokens=4)
+        assert m.steps_completed == 8
+        assert router._checker is not None      # the checker really ran
+        assert len(router.sched.ledger) == 0
+
+
+class TestFuzzHarness:
+    def test_artifact_round_trip(self, tmp_path, monkeypatch, arm):
+        """A failing round shrinks and lands as a replayable JSON artifact
+        carrying the error, the kvsan trace, and the minimal corpus."""
+        import random
+
+        from repro.analysis import fuzz as fz
+
+        def fake_run(knobs, corpus, cfg, params):
+            # fails regardless of corpus size → shrinks to one program
+            return KvsanError("double-free of dev page 3",
+                              ["[scope] free dev:3"])
+
+        monkeypatch.setattr(fz, "_run_once", fake_run)
+        rng_corp = fz._make_corpus(random.Random(0), 0)
+        knobs = fz._make_knobs(random.Random(0))
+        corpus, err, attempts = fz._shrink(
+            knobs, rng_corp, fake_run(knobs, rng_corp, None, None), None, None
+        )
+        assert len(corpus) == 1        # shrank to a single program
+        rep = fz._report(0, 0, knobs, corpus, err, attempts)
+        out = tmp_path / "artifact.json"
+        out.write_text(json.dumps(fz.asdict(rep)))
+        loaded = json.loads(out.read_text())
+        assert loaded["error_type"] == "KvsanError"
+        assert loaded["kvsan_trace"] == ["[scope] free dev:3"]
+        assert len(loaded["corpus"]) == 1
+        assert loaded["corpus"][0]["steps"][0]["input_tokens"] >= 32

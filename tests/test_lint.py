@@ -1,0 +1,284 @@
+"""The repo lint (``python -m repro.analysis.lint``): one positive and
+one negative fixture per rule, the suppression-marker escape hatch, and
+the gate the CI job enforces — the real tree lints clean."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis import lint
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_lint(tmp_path, source: str, name: str = "mod.py"):
+    f = tmp_path / name
+    f.write_text(source)
+    return lint.run([str(f)])
+
+
+def rules_hit(violations):
+    return {v.rule for v in violations}
+
+
+class TestDonatedReuse:
+    BAD = """
+import jax
+
+def fn(x):
+    return x
+
+step = jax.jit(fn, donate_argnums=(0,))
+
+def caller(buf):
+    out = step(buf)
+    return buf.sum() + out
+"""
+    GOOD = """
+import jax
+
+def fn(x):
+    return x
+
+step = jax.jit(fn, donate_argnums=(0,))
+
+def caller(buf):
+    buf = step(buf)
+    return buf.sum()
+"""
+
+    def test_positive(self, tmp_path):
+        assert "KV001" in rules_hit(run_lint(tmp_path, self.BAD))
+
+    def test_negative(self, tmp_path):
+        assert "KV001" not in rules_hit(run_lint(tmp_path, self.GOOD))
+
+
+class TestLruCacheHashable:
+    BAD = """
+import functools
+
+@functools.lru_cache(maxsize=None)
+def build(cfg: dict, n: int):
+    return n
+"""
+    GOOD = """
+import functools
+
+@functools.lru_cache(maxsize=None)
+def build(cfg: "FrozenCfg", n: int):
+    return n
+"""
+
+    def test_positive(self, tmp_path):
+        assert "KV002" in rules_hit(run_lint(tmp_path, self.BAD))
+
+    def test_negative(self, tmp_path):
+        assert "KV002" not in rules_hit(run_lint(tmp_path, self.GOOD))
+
+    def test_unfrozen_dataclass_param(self, tmp_path):
+        src = """
+import functools
+from dataclasses import dataclass
+
+@dataclass
+class Cfg:
+    n: int = 0
+
+@functools.lru_cache(maxsize=None)
+def build(cfg: Cfg):
+    return cfg.n
+"""
+        assert "KV002" in rules_hit(run_lint(tmp_path, src))
+
+    def test_frozen_dataclass_param(self, tmp_path):
+        src = """
+import functools
+from dataclasses import dataclass
+
+@dataclass(frozen=True)
+class Cfg:
+    n: int = 0
+
+@functools.lru_cache(maxsize=None)
+def build(cfg: Cfg):
+    return cfg.n
+"""
+        assert "KV002" not in rules_hit(run_lint(tmp_path, src))
+
+
+class TestActionExhaustive:
+    BAD = """
+def apply(plan):
+    for act in plan:
+        if isinstance(act, Forward):
+            pass
+        elif isinstance(act, Offload):
+            pass
+        elif isinstance(act, Discard):
+            pass
+"""
+    GOOD_ELSE = """
+def apply(plan):
+    for act in plan:
+        if isinstance(act, Forward):
+            pass
+        elif isinstance(act, Offload):
+            pass
+        else:
+            raise ValueError(act)
+"""
+    GOOD_ALL = """
+def apply(plan):
+    for act in plan:
+        if isinstance(act, Forward):
+            pass
+        elif isinstance(act, Offload):
+            pass
+        elif isinstance(act, Discard):
+            pass
+        elif isinstance(act, SetLabel):
+            pass
+        elif isinstance(act, CancelTransfer):
+            pass
+        elif isinstance(act, Migrate):
+            pass
+"""
+
+    def test_positive(self, tmp_path):
+        vs = run_lint(tmp_path, self.BAD)
+        assert "KV003" in rules_hit(vs)
+        [v] = [v for v in vs if v.rule == "KV003"]
+        assert "SetLabel" in v.msg          # names what is missing
+
+    def test_else_suffices(self, tmp_path):
+        assert "KV003" not in rules_hit(run_lint(tmp_path, self.GOOD_ELSE))
+
+    def test_all_members_suffice(self, tmp_path):
+        assert "KV003" not in rules_hit(run_lint(tmp_path, self.GOOD_ALL))
+
+
+class TestPinPaired:
+    BAD = """
+class Stream:
+    def start(self, tree, pid):
+        tree.pin(pid)
+
+    def finish(self, tree, pid):
+        pass
+"""
+    GOOD = """
+class Stream:
+    def start(self, tree, pid):
+        tree.pin(pid)
+
+    def finish(self, tree, pid):
+        tree.unpin(pid)
+"""
+
+    def test_positive(self, tmp_path):
+        assert "KV004" in rules_hit(run_lint(tmp_path, self.BAD))
+
+    def test_negative(self, tmp_path):
+        assert "KV004" not in rules_hit(run_lint(tmp_path, self.GOOD))
+
+
+class TestWallClock:
+    BAD = """
+import time
+
+def tick():
+    return time.monotonic()
+"""
+    GOOD = """
+import time as _time
+
+def profile():
+    return _time.perf_counter()
+"""
+
+    def test_positive_in_core(self, tmp_path):
+        d = tmp_path / "repro" / "core"
+        d.mkdir(parents=True)
+        f = d / "clock_user.py"
+        f.write_text(self.BAD)
+        assert "KV005" in rules_hit(lint.run([str(f)]))
+
+    def test_perf_counter_allowed(self, tmp_path):
+        d = tmp_path / "repro" / "sim"
+        d.mkdir(parents=True)
+        f = d / "prof.py"
+        f.write_text(self.GOOD)
+        assert "KV005" not in rules_hit(lint.run([str(f)]))
+
+    def test_outside_virtual_clock_modules_allowed(self, tmp_path):
+        # serving-layer wall-clock reads (real TTFT) are fine
+        d = tmp_path / "repro" / "serving"
+        d.mkdir(parents=True)
+        f = d / "clock_user.py"
+        f.write_text(self.BAD)
+        assert "KV005" not in rules_hit(lint.run([str(f)]))
+
+
+class TestJitShapeBranch:
+    BAD = """
+import jax
+
+@jax.jit
+def fn(x):
+    if x.shape[0] > 4:
+        return x * 2
+    return x
+"""
+    GOOD_MARKED = """
+import jax
+
+@jax.jit
+def fn(x):
+    if x.shape[0] > 4:  # lint: jit-shape-branch-ok
+        return x * 2
+    return x
+"""
+    GOOD_UNJITTED = """
+def fn(x):
+    if x.shape[0] > 4:
+        return x * 2
+    return x
+"""
+
+    def test_positive(self, tmp_path):
+        assert "KV006" in rules_hit(run_lint(tmp_path, self.BAD))
+
+    def test_marker_suppresses(self, tmp_path):
+        assert "KV006" not in rules_hit(run_lint(tmp_path, self.GOOD_MARKED))
+
+    def test_unjitted_function_allowed(self, tmp_path):
+        assert "KV006" not in rules_hit(run_lint(tmp_path, self.GOOD_UNJITTED))
+
+
+class TestDriver:
+    def test_syntax_error_reported_not_crash(self, tmp_path):
+        vs = run_lint(tmp_path, "def broken(:\n")
+        assert rules_hit(vs) == {"KV000"}
+
+    def test_clean_file_reports_nothing(self, tmp_path):
+        assert run_lint(tmp_path, "x = 1\n") == []
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(TestActionExhaustive.BAD)
+        assert lint.main([str(bad)]) == 1
+        good = tmp_path / "good.py"
+        good.write_text("x = 1\n")
+        assert lint.main([str(good)]) == 0
+        assert "clean" in capsys.readouterr().out
+
+    def test_repo_lints_clean(self):
+        """The CI gate: the actual tree has no violations (deliberate
+        exceptions carry `lint: <rule>-ok` markers)."""
+        paths = [
+            str(REPO / d)
+            for d in ("src", "tests", "benchmarks", "examples")
+            if (REPO / d).is_dir()
+        ]
+        vs = lint.run(paths)
+        assert vs == [], "\n".join(str(v) for v in vs)

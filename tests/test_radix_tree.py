@@ -109,6 +109,64 @@ class TestTypedEviction:
         assert not t.root.children  # fully garbage-collected
 
 
+class TestPinUnpinEdges:
+    """Refcount discipline at the seams the transfer plane exercises:
+    pins racing eviction, repeated teardown, and (under kvsan strict
+    mode) the underflow the historical ``max(0, ...)`` clamp hid."""
+
+    def test_unpin_while_reload_holds_nodes(self):
+        """A decode release (unpin) while an in-flight reload still holds
+        its own acquire must leave the reload's refcount intact — the
+        nodes stay unevictable until the stream also releases."""
+        t = TypedRadixTree(page_tokens=2)
+        nodes = t.insert_chain(toks(4), [0, 1], "p", TypeLabel.BUSY)
+        t.pin("p")                 # decode slot
+        t.acquire_nodes(nodes)     # in-flight reload stream
+        t.unpin("p")               # decode retires first
+        assert [n.refcount for n in nodes] == [1, 1]
+        assert t.evictable("gpu") == []          # still protected
+        t.release_nodes(nodes)     # stream commits
+        assert [n.refcount for n in nodes] == [0, 0]
+        assert len(t.evictable("gpu")) == 1      # leaf evictable again
+
+    def test_double_release_program_is_idempotent(self):
+        t = TypedRadixTree(page_tokens=2)
+        t.insert_chain(toks(4), [0, 1], "p", TypeLabel.BUSY)
+        t.release_program("p")
+        t.release_program("p")                   # second is a no-op
+        assert t.program_nodes("p") == []
+        # pins after release target an empty node list, harmlessly
+        t.pin("p")
+        t.unpin("p")
+
+    def test_pin_after_partial_eviction(self):
+        """Eviction between a program's runs shrinks its chain on-device;
+        a later pin must hold the *surviving* nodes only and balance."""
+        t = TypedRadixTree(page_tokens=2)
+        nodes = t.insert_chain(toks(6), [0, 1, 2], "p", TypeLabel.IDLE)
+        leaf = t.evictable("gpu")[0]
+        assert leaf is nodes[2]
+        t.evict(leaf, "gpu")                     # tail page gone
+        t.pin("p")
+        # the evicted node is still in the program's node list (its page
+        # is just elsewhere/nowhere); all three refcounts move together
+        assert [n.refcount for n in nodes] == [1, 1, 1]
+        assert t.evictable("gpu") == []
+        t.unpin("p")
+        assert [n.refcount for n in nodes] == [0, 0, 0]
+
+    def test_strict_mode_rejects_unbalanced_unpin(self, monkeypatch):
+        from repro.analysis import kvsan
+
+        monkeypatch.setenv(kvsan.ENV_VAR, "1")
+        t = TypedRadixTree(page_tokens=2)
+        t.insert_chain(toks(4), [0, 1], "p", TypeLabel.BUSY)
+        t.pin("p")
+        t.unpin("p")
+        with pytest.raises(kvsan.KvsanError):
+            t.unpin("p")
+
+
 @given(
     seqs=st.lists(
         st.lists(st.integers(0, 3), min_size=2, max_size=16),

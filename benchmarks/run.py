@@ -12,16 +12,23 @@ import argparse
 import time
 
 from benchmarks import (
+    chunked_prefill,
     churn,
+    continuous_batching,
     multi_replica,
+    paged_decode,
     phase_cdf,
     roofline,
     scheduler_overhead,
     single_replica,
     ssd_tier,
     tool_call_cdf,
+    transfer_overlap,
 )
 
+# every section that emits a BENCH_*.json must be listed here — the
+# orchestrator is the one entry point that regenerates the whole
+# artifacts/ set, so a module missing from this list silently drifts
 SECTIONS = [
     ("fig3_tool_call_cdf", tool_call_cdf.main),
     ("fig5_phase_cdf", phase_cdf.main),
@@ -31,6 +38,10 @@ SECTIONS = [
     ("churn", churn.main),
     ("ssd_tier_7.1_extension", ssd_tier.main),
     ("roofline", roofline.main),
+    ("paged_decode", paged_decode.main),
+    ("transfer_overlap", transfer_overlap.main),
+    ("continuous_batching", continuous_batching.main),
+    ("chunked_prefill", chunked_prefill.main),
 ]
 
 

@@ -7,7 +7,13 @@
 * :mod:`repro.analysis.lint` — repo-specific AST lint
   (``python -m repro.analysis.lint``).
 * :mod:`repro.analysis.fuzz` — randomized replay fuzzer that drives the
-  router under the sanitizer (``python -m repro.analysis.fuzz``).
+  router under the sanitizer (``python -m repro.analysis.fuzz``);
+  ``--compile-audit`` also arms the compile tracker per round.
+* :mod:`repro.analysis.compile_tracker` — recompile-budget interposer
+  over the hot-path jit caches (``REPRO_JITAUDIT=1``).
+* :mod:`repro.analysis.jitaudit` — static compile-plane auditor:
+  donation verification, retrace-hazard probes, and static rooflines
+  over the traced jaxprs/HLO (``python -m repro.analysis.jitaudit``).
 
 This ``__init__`` stays import-light on purpose: ``kvpool`` and
 ``radix_tree`` import :mod:`repro.analysis.kvsan` at module load, so

@@ -17,6 +17,13 @@ and dumped as a JSON artifact — seed, knobs, the minimal corpus, the
 error, the sanitizer's recent page-event ring, and the action log — so
 the bug replays from the artifact alone.
 
+``--compile-audit`` additionally arms the compile tracker
+(``REPRO_JITAUDIT=1``), warms every engine through its bucket specs
+before replay, and lets the router's end-of-replay hook fail the round
+if any hot-path jit compiled after warmup — randomized knob coverage
+for the recompile budget that the deterministic jitaudit CLI checks at
+one geometry only.
+
 CLI::
 
     python -m repro.analysis.fuzz --rounds 8 --seed 0 --out artifacts/
@@ -33,7 +40,7 @@ import random
 import sys
 from dataclasses import asdict, dataclass, field
 
-from repro.analysis import kvsan
+from repro.analysis import compile_tracker, kvsan
 
 #: replay knobs every round draws from
 _SCHEDULERS = ("mori", "smg", "ta")
@@ -98,7 +105,7 @@ def _make_knobs(rng: random.Random) -> dict:
     }
 
 
-def _build_router(knobs: dict, cfg, params):
+def _build_router(knobs: dict, cfg, params, *, audit: bool = False):
     from repro.core import SchedulerConfig
     from repro.core.types import TransferCost
     from repro.serving import Engine, MoriRouter
@@ -108,6 +115,11 @@ def _build_router(knobs: dict, cfg, params):
         cfg, params, page_tokens=8, n_device_pages=256, n_host_pages=128,
         max_slots=knobs["max_slots"], max_seq=256,
     )
+    if audit:
+        # warm every bucket spec and snapshot the compile caches; the
+        # router's end-of-replay hook then fails the round on any
+        # post-warmup compile (a shape the warmup buckets missed)
+        engine.warmup(prefill_chunks=knobs["chunked_prefill"])
     reserve = getattr(engine, "decode_reserve_pages", 0)
     cache_bytes = (engine.pool.n_device_pages - reserve) * engine.pool.page_bytes
     # never squeeze below what the largest single program needs resident
@@ -130,9 +142,10 @@ def _build_router(knobs: dict, cfg, params):
     return router
 
 
-def _run_once(knobs: dict, corpus, cfg, params) -> Exception | None:
+def _run_once(knobs: dict, corpus, cfg, params, *,
+              audit: bool = False) -> Exception | None:
     """One replay; returns the exception (with router attached) or None."""
-    router = _build_router(knobs, cfg, params)
+    router = _build_router(knobs, cfg, params, audit=audit)
     try:
         router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=4)
         return None
@@ -141,7 +154,7 @@ def _run_once(knobs: dict, corpus, cfg, params) -> Exception | None:
         return exc
 
 
-def _shrink(knobs: dict, corpus, err, cfg, params):
+def _shrink(knobs: dict, corpus, err, cfg, params, *, audit: bool = False):
     """Greedy corpus reduction preserving the failure's error type."""
     attempts = 0
     want = type(err).__name__
@@ -150,7 +163,7 @@ def _shrink(knobs: dict, corpus, err, cfg, params):
     while i < len(corpus) and len(corpus) > 1 and attempts < 32:
         cand = corpus[:i] + corpus[i + 1:]
         attempts += 1
-        e = _run_once(knobs, cand, cfg, params)
+        e = _run_once(knobs, cand, cfg, params, audit=audit)
         if e is not None and type(e).__name__ == want:
             corpus, err = cand, e
         else:
@@ -165,7 +178,7 @@ def _shrink(knobs: dict, corpus, err, cfg, params):
             cand = list(corpus)
             cand[i] = type(tr)(tr.program_id, tr.steps[:-1])
             attempts += 1
-            e = _run_once(knobs, cand, cfg, params)
+            e = _run_once(knobs, cand, cfg, params, audit=audit)
             if e is not None and type(e).__name__ == want:
                 corpus, err, changed = cand, e, True
             if attempts >= 48:
@@ -197,11 +210,16 @@ def fuzz(
     seed: int = 0,
     out_dir: str | None = None,
     *,
+    compile_audit: bool = False,
     log=print,
 ) -> list[FuzzFailure]:
     """Run ``rounds`` randomized replays; returns failure reports (empty
-    means clean). Arms kvsan for every pool built in this process."""
+    means clean). Arms kvsan for every pool built in this process; with
+    ``compile_audit`` also arms the compile tracker and fails any round
+    whose replay compiles a hot-path jit after warmup."""
     os.environ[kvsan.ENV_VAR] = "1"
+    if compile_audit:
+        os.environ[compile_tracker.ENV_VAR] = "1"
     from repro.configs import get_config
     from repro.models import Model, materialize
 
@@ -212,15 +230,17 @@ def fuzz(
         rng = random.Random((seed << 16) ^ r)
         knobs = _make_knobs(rng)
         corpus = _make_corpus(rng, r)
-        err = _run_once(knobs, corpus, cfg, params)
+        err = _run_once(knobs, corpus, cfg, params, audit=compile_audit)
         if err is None:
             log(f"round {r}: ok ({knobs['scheduler']}, "
                 f"{'sync' if knobs['sync_transfers'] else 'async'}, "
                 f"{'serial' if knobs['serial_decode'] else 'pump'}"
-                f"{', chunked' if knobs['chunked_prefill'] else ''}, "
+                f"{', chunked' if knobs['chunked_prefill'] else ''}"
+                f"{', compile-audited' if compile_audit else ''}, "
                 f"{len(corpus)} programs)")
             continue
-        corpus, err, attempts = _shrink(knobs, corpus, err, cfg, params)
+        corpus, err, attempts = _shrink(knobs, corpus, err, cfg, params,
+                                        audit=compile_audit)
         rep = _report(r, seed, knobs, corpus, err, attempts)
         failures.append(rep)
         log(f"round {r}: FAIL {rep.error_type}: {rep.error.splitlines()[0]}")
@@ -241,8 +261,14 @@ def main(argv=None) -> int:
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="artifacts")
+    ap.add_argument(
+        "--compile-audit", action="store_true",
+        help="arm REPRO_JITAUDIT: warm each engine's bucket specs and "
+             "fail any round that compiles a hot-path jit mid-replay",
+    )
     args = ap.parse_args(argv)
-    failures = fuzz(args.rounds, args.seed, args.out)
+    failures = fuzz(args.rounds, args.seed, args.out,
+                    compile_audit=args.compile_audit)
     if failures:
         print(f"{len(failures)}/{args.rounds} rounds failed")
         return 1

@@ -34,6 +34,12 @@ flagged line):
   ``jax.jit`` recompiles per shape; either bucket the shapes
   deliberately (and mark the line) or hoist the branch out of the
   jitted body.
+* **KV007 decorated-donated-reuse** — the decorator-form complement of
+  KV001: an argument passed at a donated position of a
+  ``@partial(jax.jit, donate_argnums=...)`` function is invalidated
+  when the call returns; reading it afterwards is a use-after-donate.
+  (The compile-plane side — whether XLA actually honored the donation —
+  is ``python -m repro.analysis.jitaudit``.)
 """
 from __future__ import annotations
 
@@ -140,6 +146,24 @@ def _index_dataclasses(tree: ast.Module, registry: dict[str, bool]) -> None:
 # --------------------------------------------------------------------------
 # KV001 donated-reuse
 # --------------------------------------------------------------------------
+def _donated_kw(call: ast.Call) -> tuple[int, ...]:
+    """The literal ``donate_argnums`` positions of a jit call, if any."""
+    donated: tuple[int, ...] = ()
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        if isinstance(kw.value, ast.Tuple):
+            donated = tuple(
+                e.value for e in kw.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)
+            )
+        elif isinstance(kw.value, ast.Constant) and isinstance(
+            kw.value.value, int
+        ):
+            donated = (kw.value.value,)
+    return donated
+
+
 def _donated_targets(tree: ast.Module) -> dict[tuple[str, str], tuple[int, ...]]:
     """Map a callable's reference key -> donated positional indices, from
     ``X = jax.jit(fn, donate_argnums=(...))`` assignments."""
@@ -150,19 +174,7 @@ def _donated_targets(tree: ast.Module) -> dict[tuple[str, str], tuple[int, ...]]
         call = node.value
         if not _is_jax_jit(call.func):
             continue
-        donated: tuple[int, ...] = ()
-        for kw in call.keywords:
-            if kw.arg != "donate_argnums":
-                continue
-            if isinstance(kw.value, ast.Tuple):
-                donated = tuple(
-                    e.value for e in kw.value.elts
-                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
-                )
-            elif isinstance(kw.value, ast.Constant) and isinstance(
-                kw.value.value, int
-            ):
-                donated = (kw.value.value,)
+        donated = _donated_kw(call)
         if not donated:
             continue
         for tgt in node.targets:
@@ -216,6 +228,57 @@ def _enclosing_stmt(func: ast.FunctionDef, call: ast.Call) -> ast.stmt | None:
     return best
 
 
+def _reuse_after_call(
+    path: str, func: ast.FunctionDef, call: ast.Call,
+    donated: tuple[int, ...], lines: list[str], *, rule: str,
+    rule_key: str, callee_desc: str,
+) -> list[Violation]:
+    """Flag reads of a donated call argument after the call returns —
+    shared engine for KV001 (assignment-form jits) and KV007 (decorator-
+    form jits).  A Store to the name inside the call's own statement
+    (``x, y = fn(..., x, y)``) or any later rebinding clears the taint."""
+    out: list[Violation] = []
+    stmt = _enclosing_stmt(func, call)
+    for pos in donated:
+        if pos >= len(call.args):
+            continue
+        akey = _expr_key(call.args[pos])
+        if akey is None:
+            continue
+        call_end = (call.end_lineno or call.lineno,
+                    call.end_col_offset or 0)
+        if stmt is not None and any(
+            isinstance(r.ctx, ast.Store)
+            for r in _refs_of(func, akey)
+            if stmt.lineno <= r.lineno <= (stmt.end_lineno or 0)
+            and (r.lineno, r.col_offset) < (call.lineno, call.col_offset)
+        ):
+            continue
+        after = sorted(
+            (
+                r
+                for r in _refs_of(func, akey)
+                if (r.lineno, r.col_offset) > call_end
+            ),
+            key=lambda r: (r.lineno, r.col_offset),
+        )
+        for ref in after:
+            if isinstance(ref.ctx, ast.Store):
+                break                   # rebound: donation resolved
+            if not _suppressed(lines, ref.lineno, rule_key):
+                name = akey[1] if akey[0] == "name" else f"self.{akey[1]}"
+                out.append(Violation(
+                    path, ref.lineno, rule,
+                    f"`{name}` is read after being donated to "
+                    f"{callee_desc} on line {call.lineno} "
+                    f"(donate_argnums position {pos}); the buffer "
+                    f"is invalidated by donation — rebind the "
+                    f"call's result first",
+                ))
+            break
+    return out
+
+
 def check_donated_reuse(
     path: str, tree: ast.Module, lines: list[str], registry
 ) -> list[Violation]:
@@ -233,48 +296,74 @@ def check_donated_reuse(
             ckey = _expr_key(call.func)
             if ckey not in targets:
                 continue
-            stmt = _enclosing_stmt(func, call)
-            for pos in targets[ckey]:
-                if pos >= len(call.args):
-                    continue
-                akey = _expr_key(call.args[pos])
-                if akey is None:
-                    continue
-                call_end = (call.end_lineno or call.lineno,
-                            call.end_col_offset or 0)
-                # a Store to the donated name in the same statement
-                # (``x, y = fn(..., x, y)``) rebinds it — taint cleared
-                if stmt is not None and any(
-                    isinstance(r.ctx, ast.Store)
-                    for r in _refs_of(func, akey)
-                    if stmt.lineno <= r.lineno <= (stmt.end_lineno or 0)
-                    and (r.lineno, r.col_offset) < (call.lineno, call.col_offset)
-                ):
-                    continue
-                after = sorted(
-                    (
-                        r
-                        for r in _refs_of(func, akey)
-                        if (r.lineno, r.col_offset) > call_end
-                    ),
-                    key=lambda r: (r.lineno, r.col_offset),
-                )
-                for ref in after:
-                    if isinstance(ref.ctx, ast.Store):
-                        break               # rebound: donation resolved
-                    if not _suppressed(lines, ref.lineno, "donated-reuse"):
-                        name = (
-                            akey[1] if akey[0] == "name" else f"self.{akey[1]}"
-                        )
-                        out.append(Violation(
-                            path, ref.lineno, "KV001",
-                            f"`{name}` is read after being donated to the "
-                            f"jitted call on line {call.lineno} "
-                            f"(donate_argnums position {pos}); the buffer "
-                            f"is invalidated by donation — rebind the "
-                            f"call's result first",
-                        ))
-                    break
+            out += _reuse_after_call(
+                path, func, call, targets[ckey], lines,
+                rule="KV001", rule_key="donated-reuse",
+                callee_desc="the jitted call",
+            )
+    return out
+
+
+# --------------------------------------------------------------------------
+# KV007 decorated-donated-reuse
+# --------------------------------------------------------------------------
+def _decorator_donated(tree: ast.Module) -> dict[str, tuple[int, ...]]:
+    """Function name -> donated positional indices for *decorator-form*
+    donating jits — ``@partial(jax.jit, donate_argnums=...)`` and
+    ``@jax.jit(donate_argnums=...)`` — the forms KV001's assignment
+    scanner cannot see.  Methods (first parameter ``self``/``cls``) are
+    skipped: their donate positions count the receiver, which call sites
+    do not spell as an argument."""
+    out: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        args = node.args.posonlyargs + node.args.args
+        if args and args[0].arg in ("self", "cls"):
+            continue
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            is_jit_dec = _is_jax_jit(dec.func) or (
+                _is_partial(dec.func) and dec.args
+                and _is_jax_jit(dec.args[0])
+            )
+            if not is_jit_dec:
+                continue
+            donated = _donated_kw(dec)
+            if donated:
+                out[node.name] = donated
+    return out
+
+
+def check_decorated_donated_reuse(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    """KV007: the decorator-form complement of KV001 (and the Python-side
+    complement of jitaudit's donation verifier) — an argument passed at a
+    donated position of a ``@partial(jax.jit, donate_argnums=...)``
+    function is invalidated when the call returns; any later read of the
+    same name is a use-after-donate."""
+    del registry
+    targets = _decorator_donated(tree)
+    if not targets:
+        return []
+    out: list[Violation] = []
+    for func in ast.walk(tree):
+        if not isinstance(func, ast.FunctionDef):
+            continue
+        for call in ast.walk(func):
+            if not isinstance(call, ast.Call):
+                continue
+            d = _dotted(call.func)
+            fname = d.rsplit(".", 1)[-1] if d else None
+            if fname not in targets:
+                continue
+            out += _reuse_after_call(
+                path, func, call, targets[fname], lines,
+                rule="KV007", rule_key="decorated-donated-reuse",
+                callee_desc=f"decorator-jitted `{fname}`",
+            )
     return out
 
 
@@ -549,6 +638,7 @@ def check_jit_shape_branch(
 # --------------------------------------------------------------------------
 RULES = (
     check_donated_reuse,
+    check_decorated_donated_reuse,
     check_lru_cache_hashable,
     check_action_exhaustive,
     check_pin_paired,
@@ -600,7 +690,7 @@ def run(paths) -> list[Violation]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="repo-specific AST lint (KV001-KV006)",
+        description="repo-specific AST lint (KV001-KV007)",
     )
     ap.add_argument("paths", nargs="*", help="files or directories to lint")
     args = ap.parse_args(argv)

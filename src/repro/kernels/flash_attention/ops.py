@@ -27,3 +27,28 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None, q_offset
     return _ref(
         q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
     )
+
+
+def audit_spec():
+    """Example-shape jit target for :mod:`repro.analysis.jitaudit` — the
+    causal prefill bucket the engine's chunked path dispatches, plus a
+    double-length probe shape (same branch class, so the traced
+    primitive structure must match)."""
+    import functools
+
+    import jax.numpy as jnp
+
+    def make(seq: int):
+        def args():
+            q = jnp.zeros((1, seq, 4, 64), jnp.bfloat16)
+            return q, q, q
+
+        return args
+
+    return {
+        "name": "kernels.flash_attention",
+        "fn": jax.jit(functools.partial(flash_attention, causal=True)),
+        "make_args": make(64),
+        "probe_args": make(128),
+        "bucket": {"seq": 64, "heads": 4, "head_dim": 64},
+    }

@@ -78,3 +78,28 @@ def paged_attention_decode(
         q, k_new, v_new, k_pages, v_pages, block_tables, lengths,
         softcap=softcap, window=window,
     )
+
+
+def audit_spec():
+    """Example-shape jit target for :mod:`repro.analysis.jitaudit` — one
+    decode step over a paged pool at one table bucket, probed against the
+    next bucket (the structure must not depend on the table width)."""
+    import jax.numpy as jnp
+
+    def make(table_pages: int):
+        def args():
+            q = jnp.zeros((2, 4, 64), jnp.bfloat16)
+            pages = jnp.zeros((16, 8, 4, 64), jnp.bfloat16)
+            tables = jnp.zeros((2, table_pages), jnp.int32)
+            lengths = jnp.ones(2, jnp.int32)
+            return q, pages, pages, tables, lengths
+
+        return args
+
+    return {
+        "name": "kernels.paged_attention",
+        "fn": jax.jit(paged_attention),
+        "make_args": make(4),
+        "probe_args": make(8),
+        "bucket": {"batch": 2, "table_pages": 4, "page_tokens": 8},
+    }

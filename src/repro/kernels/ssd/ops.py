@@ -19,6 +19,37 @@ def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128):
         return _pallas(x, dt, A, Bm, Cm, chunk=chunk)
     if os.environ.get("REPRO_KERNEL_INTERPRET", "0") == "1":
         return _pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
-    if Bm.ndim == 3:
+    # rank normalization, not size bucketing: compiles once per rank,
+    # which is deliberate (the audit probe stays within one rank)
+    if Bm.ndim == 3:  # lint: jit-shape-branch-ok
         Bm, Cm = Bm[:, :, None, :], Cm[:, :, None, :]
     return _ref(x, dt, A, Bm, Cm, chunk=chunk)
+
+
+def audit_spec():
+    """Example-shape jit target for :mod:`repro.analysis.jitaudit` — the
+    chunked SSD scan at one sequence bucket, probed at double length
+    (more chunks, same per-chunk program structure is NOT guaranteed —
+    the scan length is baked into the jaxpr — so the probe stays within
+    one chunk count by doubling heads instead)."""
+    import functools
+
+    import jax.numpy as jnp
+
+    def make(heads: int):
+        def args():
+            x = jnp.zeros((1, 64, heads, 16), jnp.bfloat16)
+            dt = jnp.ones((1, 64, heads), jnp.float32)
+            A = -jnp.ones((heads,), jnp.float32)
+            B = jnp.zeros((1, 64, 1, 16), jnp.bfloat16)
+            return x, dt, A, B, B
+
+        return args
+
+    return {
+        "name": "kernels.ssd",
+        "fn": jax.jit(functools.partial(ssd, chunk=32)),
+        "make_args": make(2),
+        "probe_args": make(4),
+        "bucket": {"seq": 64, "heads": 2, "state": 16, "chunk": 32},
+    }

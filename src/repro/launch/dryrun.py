@@ -30,6 +30,7 @@ import jax  # noqa: F401  (deliberate early init: locks device count under XLA_F
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.hlo_cost import analyze as analyze_hlo
+from repro.launch.hlo_cost import parse_input_output_alias
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell, cell_skip_reason
 from repro.models.config import SHAPES
@@ -92,6 +93,10 @@ def run_cell(
             "peak_is_proxy": peak_is_proxy,
             "alias_bytes": mem.alias_size_in_bytes,
         },
+        # (output, param) pairs XLA actually aliased — donation requests
+        # the compiler dropped show up as alias_bytes lower than the
+        # carry footprint; the pair count makes that auditable per cell
+        "honored_aliases": len(parse_input_output_alias(hlo_text)),
         "xla_cost_once": {  # raw XLA numbers, loop bodies counted once
             "flops": cost.get("flops", 0.0),
             "bytes_accessed": cost.get("bytes accessed", 0.0),

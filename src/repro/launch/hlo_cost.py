@@ -128,6 +128,43 @@ class HloCost:
         }
 
 
+#: ``{output_tuple_index}: (param_number, {param_path}[, kind])`` pairs in
+#: the module header — what XLA actually honored out of donate_argnums
+_ALIAS_PAIR_RE = re.compile(r"\{\s*([\d,\s]*)\}:\s*\(\s*(\d+)\s*,\s*\{([\d,\s]*)\}")
+
+
+def parse_input_output_alias(hlo_text: str) -> list[tuple[int, int]]:
+    """``(output_index, param_index)`` pairs from the compiled module's
+    ``input_output_alias`` header — the ground truth for whether a
+    ``donate_argnums`` request survived compilation.  A donated buffer
+    XLA could not reuse (dtype/shape mismatch with every output) simply
+    has no pair here; the jitaudit donation verifier diffs this list
+    against the donation marks in the lowered StableHLO.  Only
+    single-level output-tuple indices are expected (jit flattens
+    pytrees); deeper paths keep their leading index."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    # the alias map nests braces ({out_path}: (param, {param_path})), so
+    # extract the body with a balance scan rather than a regex
+    i = start + len("input_output_alias=")
+    depth, body_start, body = 0, i + 1, ""
+    for j in range(i, len(hlo_text)):
+        ch = hlo_text[j]
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                body = hlo_text[body_start:j]
+                break
+    out: list[tuple[int, int]] = []
+    for pair in _ALIAS_PAIR_RE.finditer(body):
+        out_path = [int(x) for x in pair.group(1).split(",") if x.strip()]
+        out.append((out_path[0] if out_path else 0, int(pair.group(2))))
+    return out
+
+
 def _parse(hlo_text: str) -> tuple[dict[str, _Comp], str | None]:
     comps: dict[str, _Comp] = {}
     entry = None

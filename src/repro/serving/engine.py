@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import compile_tracker
 from repro.core.radix_tree import TypedRadixTree
 from repro.core.types import Tier, TypeLabel
 from repro.dist import ReplicaPlacement
@@ -96,6 +97,30 @@ class PrefillJob:
         return len(self.suffix) - self.cursor
 
 
+@dataclass
+class WarmupSpec:
+    """One shape ``Engine.warmup`` precompiles — and, equivalently, one
+    audit target for :mod:`repro.analysis.jitaudit`.
+
+    ``make_args`` is lazy on purpose: the decode/chunk fns donate the
+    pool arrays, so each spec must read ``pool.block_table_view()`` (or
+    the dense slot buffers) *at call time*, after the previous spec's
+    donation was re-adopted.  ``probe_group`` names the structural
+    equivalence class: any two specs in a group must trace to the same
+    primitive sequence (the jitaudit shape-branch probe pairs
+    consecutive group members).
+    """
+
+    name: str
+    kind: str                    # "dense" | "paged_decode" | "chunk_prefill"
+    fn_name: str                 # engine attribute holding the jitted fn
+    make_args: object            # () -> positional argument tuple
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+    bucket: dict = field(default_factory=dict)
+    probe_group: str = ""
+
+
 def _chunk_prefill_impl(model, ctx, params, k_pages, v_pages, prefix_idx,
                         write_idx, tokens, prefix_valid, pos0, take,
                         logit_idx, page_tokens):
@@ -138,6 +163,10 @@ def _chunk_prefill_fn(cfg: ModelConfig):
     model = Model(cfg)
     fn = functools.partial(_chunk_prefill_impl, model, NULL_CTX)
     return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(10,))
+
+
+#: per-process engine ids for compile-tracker names (stable within a run)
+_ENGINE_IDS = iter(range(1 << 30))
 
 
 @dataclass
@@ -266,6 +295,30 @@ class Engine:
         # metrics
         self.steps = 0
         self.evicted_pages = {"gpu": 0, "cpu": 0}
+        # compile tracker (REPRO_JITAUDIT=1 only): register the hot-path
+        # jits so post-warmup recompiles are attributable and gateable
+        self._audit_id = next(_ENGINE_IDS)
+        if compile_tracker.enabled():
+            tracker = compile_tracker.get_tracker()
+            for name, fn in self.jit_functions().items():
+                tracker.register(name, fn)
+
+    # ------------------------------------------------------- compile plane
+    def jit_functions(self) -> dict:
+        """The hot-path jitted callables by tracker name.  The process-
+        global chunk-prefill fn keeps a shared name (one compile cache,
+        one budget); per-engine fns are suffixed so multi-replica routers
+        track each replica's cache."""
+        if self.dense_slots:
+            return {f"engine{self._audit_id}.decode_fn": self._decode_fn}
+        out = {
+            f"engine{self._audit_id}.paged_decode_fn": self._paged_decode_fn,
+        }
+        if self.placement is None:
+            out["chunk_prefill_fn[shared]"] = self._chunk_fn
+        else:
+            out[f"engine{self._audit_id}.chunk_prefill_fn"] = self._chunk_fn
+        return out
 
     # ------------------------------------------------------------- kvsan
     def _kvsan_reachable(self):
@@ -293,6 +346,102 @@ class Engine:
         occupancy signal the scheduler's slot probe reads."""
         return len(self._free_slots)
 
+    def warmup_specs(self, prefill_chunks: bool = False) -> list[WarmupSpec]:
+        """Every shape the serving hot path can dispatch, as lazy-argument
+        specs — the single source of truth shared by :meth:`warmup` (which
+        executes them) and :mod:`repro.analysis.jitaudit` (which traces
+        them without executing).
+
+        Paged decode emits one spec per table bucket (tables pad to
+        ``table_bucket_pages``); chunked prefill one per (prefix-page
+        bucket x chunk bucket) pair up to ``prefill_chunk_tokens``; the
+        dense path a single shape.  A replay that stays inside these specs
+        never compiles after warmup — the compile tracker's budget.
+        """
+        if self.dense_slots:
+            def dense_args():
+                return (
+                    self.params, self.slot_k, self.slot_v,
+                    jnp.zeros(self.max_slots, jnp.int32),
+                    jnp.ones(self.max_slots, jnp.int32),
+                )
+
+            return [WarmupSpec(
+                name="decode_fn", kind="dense", fn_name="_decode_fn",
+                make_args=dense_args, donate_argnums=(1, 2),
+                bucket={"max_slots": self.max_slots,
+                        "max_seq": self.max_seq},
+                probe_group=f"engine{self._audit_id}/dense",
+            )]
+        scratch = np.asarray(self._scratch_pages, np.int32)
+        n_buckets = -(-self.pages_per_slot // self._table_bucket)
+        specs: list[WarmupSpec] = []
+
+        def decode_args(p_pad: int):
+            def make():
+                tables = np.repeat(scratch[:, None], p_pad, axis=1)
+                k_pages, v_pages = self.pool.block_table_view()
+                return (
+                    self.params, k_pages, v_pages,
+                    jnp.zeros(self.max_slots, jnp.int32),
+                    jnp.ones(self.max_slots, jnp.int32),
+                    jnp.asarray(tables), jnp.asarray(scratch),
+                    jnp.zeros(self.max_slots, jnp.int32),
+                )
+
+            return make
+
+        for i in range(1, n_buckets + 1):
+            p_pad = i * self._table_bucket
+            specs.append(WarmupSpec(
+                name=f"paged_decode_fn[pages={p_pad}]", kind="paged_decode",
+                fn_name="_paged_decode_fn", make_args=decode_args(p_pad),
+                donate_argnums=(1, 2), bucket={"table_pages": p_pad},
+                probe_group=f"engine{self._audit_id}/paged_decode",
+            ))
+        if not prefill_chunks:
+            return specs
+        T = self.page_tokens
+        cap = max(T, (self.prefill_chunk_tokens // T) * T)
+        cap_pad = -(-cap // self.prefill_bucket) * self.prefill_bucket
+        sp = int(scratch[0])
+
+        def chunk_args(p_pad: int, c_pad: int):
+            def make():
+                w_pad = -(-c_pad // T)
+                k_pages, v_pages = self.pool.block_table_view()
+                return (
+                    self.params, k_pages, v_pages,
+                    jnp.asarray([sp] * p_pad, jnp.int32),
+                    jnp.asarray([sp] * w_pad, jnp.int32),
+                    jnp.zeros((1, c_pad), jnp.int32),
+                    jnp.int32(0), jnp.int32(0),
+                    jnp.int32(c_pad), jnp.int32(c_pad - 1), T,
+                )
+
+            return make
+
+        for pb in range(n_buckets + 1):
+            p_pad = pb * self._table_bucket
+            # the prefix gather exists only when prefix pages do, so the
+            # pb==0 bucket is deliberately a different traced program —
+            # keep it in its own structural probe group
+            group = "prefix" if p_pad else "no-prefix"
+            for c_pad in range(self.prefill_bucket, cap_pad + 1,
+                               self.prefill_bucket):
+                specs.append(WarmupSpec(
+                    name=f"chunk_prefill_fn[prefix_pages={p_pad},"
+                         f"chunk={c_pad}]",
+                    kind="chunk_prefill", fn_name="_chunk_fn",
+                    make_args=chunk_args(p_pad, c_pad),
+                    donate_argnums=(1, 2), static_argnums=(10,),
+                    bucket={"prefix_pages": p_pad, "chunk_tokens": c_pad},
+                    probe_group=(
+                        f"engine{self._audit_id}/chunk_prefill/{group}"
+                    ),
+                ))
+        return specs
+
     def warmup(self, prefill_chunks: bool = False) -> None:
         """Precompile every decode-step shape before admitting traffic.
 
@@ -307,48 +456,23 @@ class Engine:
         ``prefill_chunks=True`` additionally compiles the chunked-prefill
         shapes (every prefix-page bucket x every chunk bucket up to the
         default ``prefill_chunk_tokens``) by running dummy chunks against
-        scratch pages."""
+        scratch pages.
+
+        When the compile tracker is armed (``REPRO_JITAUDIT=1``) the
+        post-warmup cache sizes are snapshotted as this engine's compile
+        budget: any later growth is a retrace warmup missed, and the
+        router fails the replay on it."""
         assert not self.slots, "warmup must run on an idle engine"
-        toks = jnp.zeros(self.max_slots, jnp.int32)
-        lens = jnp.ones(self.max_slots, jnp.int32)
-        if self.dense_slots:
-            _, self.slot_k, self.slot_v = self._decode_fn(
-                self.params, self.slot_k, self.slot_v, toks, lens
+        for spec in self.warmup_specs(prefill_chunks=prefill_chunks):
+            out = getattr(self, spec.fn_name)(*spec.make_args())
+            if spec.kind == "dense":
+                _, self.slot_k, self.slot_v = out
+            else:
+                self.pool.adopt(out[1], out[2])
+        if compile_tracker.enabled():
+            compile_tracker.get_tracker().mark_warm(
+                tuple(self.jit_functions())
             )
-            return
-        scratch = np.asarray(self._scratch_pages, np.int32)
-        n_buckets = -(-self.pages_per_slot // self._table_bucket)
-        for i in range(1, n_buckets + 1):
-            p_pad = i * self._table_bucket
-            tables = np.repeat(scratch[:, None], p_pad, axis=1)
-            k_pages, v_pages = self.pool.block_table_view()
-            _, new_k, new_v = self._paged_decode_fn(
-                self.params, k_pages, v_pages, toks, lens,
-                jnp.asarray(tables), jnp.asarray(scratch),
-                jnp.zeros(self.max_slots, jnp.int32),
-            )
-            self.pool.adopt(new_k, new_v)
-        if not prefill_chunks:
-            return
-        T = self.page_tokens
-        cap = max(T, (self.prefill_chunk_tokens // T) * T)
-        cap_pad = -(-cap // self.prefill_bucket) * self.prefill_bucket
-        sp = int(scratch[0])
-        for pb in range(n_buckets + 1):
-            p_pad = pb * self._table_bucket
-            for c_pad in range(self.prefill_bucket, cap_pad + 1,
-                               self.prefill_bucket):
-                w_pad = -(-c_pad // T)
-                k_pages, v_pages = self.pool.block_table_view()
-                _, new_k, new_v = self._chunk_fn(
-                    self.params, k_pages, v_pages,
-                    jnp.asarray([sp] * p_pad, jnp.int32),
-                    jnp.asarray([sp] * w_pad, jnp.int32),
-                    jnp.zeros((1, c_pad), jnp.int32),
-                    jnp.int32(0), jnp.int32(0),
-                    jnp.int32(c_pad), jnp.int32(c_pad - 1), T,
-                )
-                self.pool.adopt(new_k, new_v)
 
     def submit(self, req: EngineRequest) -> int:
         """Admit one request: radix match -> reload -> chunked prefill."""

@@ -80,7 +80,7 @@ import math
 import time
 from dataclasses import dataclass, field
 
-from repro.analysis import kvsan
+from repro.analysis import compile_tracker, kvsan
 from repro.analysis.invariants import ControlPlaneChecker
 from repro.core import SCHEDULERS, SchedulerConfig, TierCapacity
 from repro.core.actions import (
@@ -381,6 +381,32 @@ class MoriRouter:
                 san.verify(f"end of replay, replica {i}")
                 san.check_leaks(f"end of replay, replica {i}")
 
+    def _jitaudit_end_of_replay(self) -> None:
+        """Recompile-budget gate (no-op unless ``REPRO_JITAUDIT=1`` and
+        some engine ran ``warmup()``): a replay that retraced any tracked
+        hot-path jit past its warm snapshot stalled the pump for a full
+        XLA compile — fail it loudly with the per-function counts."""
+        if not compile_tracker.enabled():
+            return
+        tracker = compile_tracker.get_tracker()
+        if not tracker.marked():
+            return                      # no warm baseline, nothing to gate
+        grew = tracker.post_warmup_compiles()
+        if grew:
+            detail = ", ".join(
+                f"{name}: {warm} warm -> {cur}"
+                for name, (warm, cur) in sorted(grew.items())
+            )
+            phases = {
+                ph: len(tracker.events_in(ph))
+                for ph in sorted({e.phase for e in tracker.events})
+            }
+            raise RuntimeError(
+                f"compile budget violated: {len(grew)} hot-path jit(s) "
+                f"compiled after warmup ({detail}); backend compiles by "
+                f"phase: {phases} — a shape escaped the warmup buckets"
+            )
+
     def _record_ttft(self, pid: str, step_idx: int) -> None:
         """First token just landed for (pid, step): close its TTFT sample."""
         t0 = self._ttft_start.pop((pid, step_idx), None)
@@ -628,6 +654,7 @@ class MoriRouter:
             else:
                 stalled, last_progress = 0, cur
         self._kvsan_end_of_replay()
+        self._jitaudit_end_of_replay()
         self._push = None
         self._rs = None
         return self.metrics

@@ -1,0 +1,279 @@
+"""JITAUDIT + compile tracker: warmup completeness, the zero-post-warmup-
+compile budget through the real pump, and the seeded-violation fixtures
+(a broken donation and a shape-branching fn MUST be caught — an auditor
+that cannot detect a planted bug certifies nothing)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import compile_tracker, jitaudit
+from repro.configs import get_config
+from repro.models import Model, materialize
+from repro.serving import Engine, MoriRouter
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen1.5-0.5b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return materialize(Model(cfg).describe(), seed=0)
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("page_tokens", 16)
+    kw.setdefault("n_device_pages", 96)
+    kw.setdefault("n_host_pages", 64)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 128)
+    return Engine(cfg, params, **kw)
+
+
+@pytest.fixture
+def tracker(monkeypatch):
+    """Armed, clean tracker; reset on the way out so the process-global
+    singleton never leaks registrations into other tests."""
+    monkeypatch.setenv(compile_tracker.ENV_VAR, "1")
+    t = compile_tracker.get_tracker()
+    t.reset()
+    yield t
+    t.reset()
+    t.disarm()
+
+
+# --------------------------------------------------------------- warmup specs
+class TestWarmupSpecs:
+    def test_paged_specs_cover_every_bucket(self, cfg, params):
+        eng = make_engine(cfg, params)
+        specs = eng.warmup_specs(prefill_chunks=True)
+        n_buckets = -(-eng.pages_per_slot // eng._table_bucket)
+        decode = [s for s in specs if s.kind == "paged_decode"]
+        chunk = [s for s in specs if s.kind == "chunk_prefill"]
+        assert len(decode) == n_buckets
+        assert [s.bucket["table_pages"] for s in decode] == [
+            i * eng._table_bucket for i in range(1, n_buckets + 1)
+        ]
+        # every (prefix bucket x chunk bucket) pair up to the chunk cap
+        cap = max(eng.page_tokens,
+                  (eng.prefill_chunk_tokens // eng.page_tokens)
+                  * eng.page_tokens)
+        cap_pad = -(-cap // eng.prefill_bucket) * eng.prefill_bucket
+        n_chunk_buckets = cap_pad // eng.prefill_bucket
+        assert len(chunk) == (n_buckets + 1) * n_chunk_buckets
+        assert len({s.name for s in specs}) == len(specs)
+
+    def test_prefill_chunks_off_omits_chunk_specs(self, cfg, params):
+        eng = make_engine(cfg, params)
+        kinds = {s.kind for s in eng.warmup_specs(prefill_chunks=False)}
+        assert kinds == {"paged_decode"}
+
+    def test_dense_single_spec(self, cfg, params):
+        eng = make_engine(cfg, params, dense_slots=True, n_device_pages=8,
+                          n_host_pages=8, max_seq=64)
+        specs = eng.warmup_specs(prefill_chunks=True)
+        assert [s.kind for s in specs] == ["dense"]
+        assert specs[0].donate_argnums == (1, 2)
+
+    def test_warmup_compiles_exactly_the_specs(self, cfg, params):
+        eng = make_engine(cfg, params)
+        specs = eng.warmup_specs(prefill_chunks=True)
+        n_decode = sum(s.kind == "paged_decode" for s in specs)
+        chunk_before = eng._chunk_fn._cache_size()
+        eng.warmup(prefill_chunks=True)
+        # the decode fn is per-engine, so its cache is exactly the buckets;
+        # the chunk fn is process-shared, so bound the *delta* instead
+        assert eng._paged_decode_fn._cache_size() == n_decode
+        n_chunk = sum(s.kind == "chunk_prefill" for s in specs)
+        assert eng._chunk_fn._cache_size() - chunk_before <= n_chunk
+        # idempotence: a second warmup is all cache hits
+        decode_size = eng._paged_decode_fn._cache_size()
+        chunk_size = eng._chunk_fn._cache_size()
+        eng.warmup(prefill_chunks=True)
+        assert eng._paged_decode_fn._cache_size() == decode_size
+        assert eng._chunk_fn._cache_size() == chunk_size
+
+
+# ------------------------------------------------------------ compile budget
+class TestCompileBudget:
+    def _replay(self, cfg, params, engine):
+        from repro.core.types import ProgramTrace, RequestRecord
+
+        router = MoriRouter(
+            [engine], scheduler="mori",
+            gpu_capacity_bytes=(engine.radix_device_pages
+                                * engine.pool.page_bytes),
+            chunked_prefill=True,
+        )
+        corpus = [
+            ProgramTrace(f"p{p}", [
+                RequestRecord(input_tokens=20 + 11 * p + 5 * s,
+                              output_tokens=3,
+                              tool_duration_s=0.0 if s == 1 else 4.0,
+                              reasoning_wall_s=0.0)
+                for s in range(2)
+            ])
+            for p in range(3)
+        ]
+        router.replay(corpus, vocab_size=cfg.vocab_size, max_new_tokens=3)
+        return router
+
+    def test_pump_replay_compiles_nothing_after_warmup(
+        self, cfg, params, tracker
+    ):
+        eng = make_engine(cfg, params)        # registers (env armed)
+        assert set(eng.jit_functions()) <= set(tracker.registered())
+        eng.warmup(prefill_chunks=True)       # marks the warm baseline
+        assert tracker.marked()
+        self._replay(cfg, params, eng)        # raises via the router hook
+        assert tracker.post_warmup_compiles() == {}
+
+    def test_post_warmup_compile_detected_and_replay_fails(
+        self, cfg, params, tracker
+    ):
+        eng = make_engine(cfg, params)
+        eng.warmup(prefill_chunks=True)
+        # seed a bucket escape: a table width warmup never compiled
+        import numpy as np
+
+        scratch = np.asarray(eng._scratch_pages, np.int32)
+        rogue = 3 * eng._table_bucket + eng.pages_per_slot  # off-bucket
+        tables = np.repeat(scratch[:, None], rogue, axis=1)
+        k_pages, v_pages = eng.pool.block_table_view()
+        _, nk, nv = eng._paged_decode_fn(
+            eng.params, k_pages, v_pages,
+            jnp.zeros(eng.max_slots, jnp.int32),
+            jnp.ones(eng.max_slots, jnp.int32),
+            jnp.asarray(tables), jnp.asarray(scratch),
+            jnp.zeros(eng.max_slots, jnp.int32),
+        )
+        eng.pool.adopt(nk, nv)
+        grew = tracker.post_warmup_compiles()
+        assert any("paged_decode" in name for name in grew)
+        router = MoriRouter(
+            [eng], scheduler="mori",
+            gpu_capacity_bytes=(eng.radix_device_pages
+                                * eng.pool.page_bytes),
+        )
+        with pytest.raises(RuntimeError, match="compile budget violated"):
+            router._jitaudit_end_of_replay()
+
+    def test_tracker_unarmed_is_inert(self, cfg, params, monkeypatch):
+        monkeypatch.delenv(compile_tracker.ENV_VAR, raising=False)
+        t = compile_tracker.get_tracker()
+        assert not compile_tracker.enabled()
+        eng = make_engine(cfg, params)
+        # only the per-engine names are conclusive: the shared chunk fn's
+        # stable name may have been registered by an earlier armed test
+        mine = [n for n in eng.jit_functions()
+                if f"engine{eng._audit_id}" in n]
+        assert mine and not any(n in t.registered() for n in mine)
+
+
+# ------------------------------------------------------- seeded violations
+class TestSeededViolations:
+    def test_broken_donation_fires_verifier(self):
+        k = jnp.zeros((8, 16), jnp.bfloat16)
+        target = jitaudit.AuditTarget(
+            "broken",
+            jax.jit(lambda a, b: (a.astype(jnp.float32), b),
+                    donate_argnums=(0, 1)),
+            lambda: (k, k + 1), donate_argnums=(0, 1))
+        _, lowered, compiled, notes = jitaudit.trace_target(target)
+        vs = jitaudit.verify_donation(target, lowered, compiled, notes)
+        assert vs and vs[0].pass_name == "donation"
+        assert "dropped at lowering" in vs[0].msg
+
+    def test_honored_donation_is_clean(self):
+        k = jnp.zeros((8, 16), jnp.bfloat16)
+        target = jitaudit.AuditTarget(
+            "ok", jax.jit(lambda a, b: (a + 1, b * 2), donate_argnums=(0, 1)),
+            lambda: (k, k + 1), donate_argnums=(0, 1))
+        _, lowered, compiled, notes = jitaudit.trace_target(target)
+        assert jitaudit.verify_donation(target, lowered, compiled, notes) == []
+
+    def test_shape_branch_probe_fires(self):
+        def branchy(x):
+            if x.shape[0] > 8:  # lint: jit-shape-branch-ok — seeded
+                return x * 2
+            return x + 1
+
+        target = jitaudit.AuditTarget(
+            "branchy", jax.jit(branchy), lambda: (jnp.zeros(8),),
+            probe_args=lambda: (jnp.zeros(16),))
+        traced = target.fn.trace(*target.make_args())
+        vs = jitaudit.retrace_hazards(target, traced)
+        assert any("primitive structure differs" in v.msg for v in vs)
+
+    def test_baked_constant_and_weak_type_fire(self):
+        pool = jnp.zeros((64, 64), jnp.float32)
+        baked = jitaudit.AuditTarget(
+            "baked", jax.jit(lambda x: x + pool[0]),
+            lambda: (jnp.zeros(64),))
+        vs = jitaudit.retrace_hazards(
+            baked, baked.fn.trace(*baked.make_args()))
+        assert any("constant" in v.msg for v in vs)
+        weak = jitaudit.AuditTarget(
+            "weak", jax.jit(lambda a, b: a * b),
+            lambda: (2.5, jnp.zeros(4)))
+        vs = jitaudit.retrace_hazards(weak, weak.fn.trace(*weak.make_args()))
+        assert any("weak" in v.msg for v in vs)
+
+    def test_selftest_catches_all_classes(self):
+        assert jitaudit.selftest() == []
+
+
+# --------------------------------------------------------------- real targets
+class TestRealTargets:
+    def test_engine_decode_target_clean_and_in_band(self, cfg, params):
+        eng = make_engine(cfg, params)
+        targets = jitaudit.engine_targets(eng, prefill_chunks=False)
+        assert targets, "engine produced no audit targets"
+        t = targets[0]
+        traced, lowered, compiled, notes = jitaudit.trace_target(t)
+        assert jitaudit.verify_donation(t, lowered, compiled, notes) == []
+        assert jitaudit.retrace_hazards(t, traced) == []
+        row = jitaudit.roofline_row(t, traced, compiled)
+        assert jitaudit.check_roofline(t, row) == []
+        # the pool k/v donations must be honored by the compiled module
+        from repro.launch.hlo_cost import parse_input_output_alias
+
+        assert len(parse_input_output_alias(compiled.as_text())) >= 2
+
+    def test_kernel_targets_trace_and_stay_in_band(self):
+        for t in jitaudit.kernel_targets():
+            traced, _, compiled, _ = jitaudit.trace_target(t)
+            assert jitaudit.retrace_hazards(t, traced) == [], t.name
+            row = jitaudit.roofline_row(t, traced, compiled)
+            assert jitaudit.check_roofline(t, row) == [], (t.name, row)
+
+
+# ------------------------------------------------------------- tracker unit
+class TestTrackerUnit:
+    def test_register_mark_and_growth(self, tracker):
+        f = jax.jit(functools.partial(jnp.multiply, 2))
+        tracker.register("unit.f", f)
+        f(jnp.zeros(4))
+        tracker.mark_warm(("unit.f",))
+        assert tracker.post_warmup_compiles() == {}
+        f(jnp.zeros(8))                      # new shape -> new lowering
+        assert tracker.post_warmup_compiles() == {"unit.f": (1, 2)}
+
+    def test_same_object_reregistration_keeps_baseline(self, tracker):
+        f = jax.jit(lambda x: x + 1)
+        tracker.register("unit.shared", f)
+        f(jnp.zeros(4))
+        tracker.mark_warm(("unit.shared",))
+        tracker.register("unit.shared", f)   # same object: no-op
+        assert tracker.post_warmup_compiles() == {}
+
+    def test_phase_tagged_backend_compiles(self, tracker):
+        f = jax.jit(lambda x: x * 3 + 1)
+        with tracker.phase("unit-test-phase"):
+            f(jnp.arange(7))
+        assert len(tracker.events_in("unit-test-phase")) >= 1

@@ -367,7 +367,7 @@ class TestFuzzHarness:
 
         from repro.analysis import fuzz as fz
 
-        def fake_run(knobs, corpus, cfg, params):
+        def fake_run(knobs, corpus, cfg, params, *, audit=False):
             # fails regardless of corpus size → shrinks to one program
             return KvsanError("double-free of dev page 3",
                               ["[scope] free dev:3"])

@@ -53,6 +53,76 @@ def caller(buf):
         assert "KV001" not in rules_hit(run_lint(tmp_path, self.GOOD))
 
 
+class TestDecoratedDonatedReuse:
+    BAD = """
+import functools
+import jax
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(state, tok):
+    return state + tok
+
+def caller(state, tok):
+    out = step(state, tok)
+    return state.sum() + out
+"""
+    GOOD = """
+import functools
+import jax
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(state, tok):
+    return state + tok
+
+def caller(state, tok):
+    state = step(state, tok)
+    return state.sum()
+"""
+    METHOD = """
+import functools
+import jax
+
+class Engine:
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def step(self, state):
+        return state + 1
+
+def caller(eng, state):
+    out = eng.step(state)
+    return state.sum() + out
+"""
+    SUPPRESSED = """
+import functools
+import jax
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(state):
+    return state + 1
+
+def caller(state):
+    out = step(state)
+    return state.sum() + out  # lint: decorated-donated-reuse-ok
+"""
+
+    def test_positive(self, tmp_path):
+        assert "KV007" in rules_hit(run_lint(tmp_path, self.BAD))
+
+    def test_rebind_clears(self, tmp_path):
+        assert "KV007" not in rules_hit(run_lint(tmp_path, self.GOOD))
+
+    def test_methods_skipped(self, tmp_path):
+        # donate positions on a method count `self`; call sites cannot be
+        # mapped reliably, so the rule stays quiet rather than guessing
+        assert "KV007" not in rules_hit(run_lint(tmp_path, self.METHOD))
+
+    def test_marker_suppresses(self, tmp_path):
+        assert "KV007" not in rules_hit(run_lint(tmp_path, self.SUPPRESSED))
+
+    def test_assignment_form_left_to_kv001(self, tmp_path):
+        vs = run_lint(tmp_path, TestDonatedReuse.BAD)
+        assert "KV007" not in rules_hit(vs)
+
+
 class TestLruCacheHashable:
     BAD = """
 import functools

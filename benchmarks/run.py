@@ -42,6 +42,7 @@ SECTIONS = [
     ("transfer_overlap", transfer_overlap.main),
     ("continuous_batching", continuous_batching.main),
     ("chunked_prefill", chunked_prefill.main),
+    ("multi_replica_real", multi_replica.real_main),
 ]
 
 

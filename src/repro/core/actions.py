@@ -84,8 +84,14 @@ class Discard(Action):
 
 @dataclass(frozen=True)
 class Migrate(Action):
-    """Move a host-resident KV copy between replicas (beyond-paper,
-    gated behind ``SchedulerConfig.migrate_on_pressure``)."""
+    """Move a host-resident KV copy between replicas. Emitted under
+    pressure rebalance (``SchedulerConfig.migrate_on_pressure``,
+    beyond-paper, off by default) and replica drain
+    (``SchedulerConfig.drain_migrate``, on by default). Both runtimes
+    execute it through the endpoint-addressed copy API
+    (:func:`repro.core.transfers.copy_request_for`); the real transfer
+    plane streams it page-by-page through host staging, cancellable
+    mid-flight like any other transfer."""
 
     src_replica: int
     dst_replica: int

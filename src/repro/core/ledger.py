@@ -142,6 +142,11 @@ class TransferLedger:
         transfer plane exports (``RouterMetrics.peak_inflight_bytes``)."""
         return sum(r.nbytes for r in self.in_flight(replica, channel, kind))
 
+    def is_open(self, action_id: int) -> bool:
+        """Whether ``action_id`` still has an open record (it may have been
+        dropped by program teardown or replica failure in the meantime)."""
+        return action_id in self._open
+
     def open_for(self, pid: str, kind: str) -> TransferRecord | None:
         """The still-pending transfer of ``kind`` for ``pid``, if any."""
         for r in self._open.values():

@@ -131,6 +131,47 @@ class TypedRadixTree:
         self._program_nodes[program_id] = nodes
         return nodes
 
+    def insert_host_chain(
+        self,
+        tokens: list[int],
+        host_page_ids: list[int],
+        program_id: str,
+        label: TypeLabel,
+    ) -> tuple[list[RadixNode], list[int]]:
+        """Insert/extend a path of full pages resident on the *host* tier —
+        the landing verb for a cross-replica migrate: imported DRAM pages
+        become a host-resident prefix chain, reloadable to the GPU by the
+        normal reload path. One page id is consumed per chain node; a node
+        that already holds a host copy keeps it and the supplied duplicate
+        is returned for the caller to free (share-on-match at the host
+        tier, mirroring :meth:`insert_chain`'s device-side semantics)."""
+        node = self.root
+        nodes: list[RadixNode] = []
+        duplicates: list[int] = []
+        t = next(self._clock)
+        pi = 0
+        for i in range(0, len(tokens) - self.page_tokens + 1, self.page_tokens):
+            key = tuple(tokens[i : i + self.page_tokens])
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(tokens=key, parent=node)
+                node.children[key] = child
+            if pi >= len(host_page_ids):
+                raise ValueError("not enough host pages supplied for new nodes")
+            if child.host_page is None:
+                child.host_page = host_page_ids[pi]
+            else:
+                duplicates.append(host_page_ids[pi])
+            pi += 1
+            child.label = label
+            child.last_access = t
+            nodes.append(child)
+            node = child
+        if pi != len(host_page_ids):
+            raise ValueError(f"supplied {len(host_page_ids)} pages, consumed {pi}")
+        self._program_nodes[program_id] = nodes
+        return nodes, duplicates
+
     # -------------------------------------------------------------- labels
     def restamp(self, program_id: str, label: TypeLabel) -> None:
         """Propagate a scheduler label change onto the program's blocks."""

@@ -181,13 +181,44 @@ class AgentScheduler(abc.ABC):
 
     # ------------------------------------------------------- fault handling
     def replica_failed(self, replica_id: int, now: float) -> PlacementPlan:
-        """Node failure: all KV on the replica is lost. Its programs drop to
-        the Waiting queue and will be re-admitted elsewhere via the normal
-        recompute path — exactly MORI's Waiting-tier semantics, which is
-        what makes the design restart-tolerant. The returned plan carries a
+        """Replica failure / drain: the GPU is gone but host DRAM is still
+        readable (the drain model — a dying node's device is what failed).
+
+        With ``drain_migrate`` (default on), DRAM-resident programs whose
+        bytes have fully landed (no open offload or migrate) are *migrated*
+        to the healthy replica with the most host headroom
+        (:meth:`ReplicaBalancer.place_drain`) instead of being discarded —
+        they re-admit with a reload instead of a full recompute. Everything
+        else (GPU-resident KV, half-written offloads) drops to the Waiting
+        queue via the normal recompute path — MORI's Waiting-tier
+        semantics, which is what makes the design restart-tolerant. The
+        returned plan carries the ``Migrate`` per drained program and a
         ``Discard`` per lost KV copy (one per program and tier)."""
         self._now = now
         rep = self.replicas[replica_id]
+        self.balancer.mark_failed(replica_id)
+        if self.config.drain_migrate:
+            for prog in list(rep.cpu.values()):
+                if prog.finished:
+                    continue
+                if (
+                    self.ledger.open_offload(prog.program_id) is not None
+                    or self.ledger.open_migrate(prog.program_id) is not None
+                ):
+                    # bytes still in flight toward (or away from) this DRAM
+                    # copy die with the node: not trustworthy to migrate
+                    continue
+                decision = self.balancer.place_drain(prog, now)
+                if not decision:
+                    continue
+                dst = self.replicas[decision.replica]
+                rep.cpu_remove(prog)
+                self._emit_migrate(prog, replica_id, dst.replica_id)
+                dst.cpu_admit(prog)
+                prog.metrics.replica_switches += 1
+                prog.dispatched = False
+                prog.lazy_demote = False
+                self._pending_source.pop(prog.program_id, None)
         for tier, prog in rep.evict_all():
             self._emit_discard(prog.program_id, replica_id, tier)
             self.waiting.add(prog)
@@ -200,7 +231,6 @@ class AgentScheduler(abc.ABC):
             prog = self.programs.get(pid)
             if prog is not None and not prog.finished:
                 prog.gate(now)  # in-flight request will be re-issued
-        self.balancer.mark_failed(replica_id)
         self.ledger.drop_replica(replica_id)
         return self._drain(now)
 
@@ -591,8 +621,9 @@ class MoriScheduler(AgentScheduler):
         #     bytes have not landed, so a reload Forward now would ship KV
         #     that does not exist on the destination yet (the promotion
         #     fires from the migrate's on_transfer_complete ack instead).
-        #     Migrate records can only exist with migrate_on_pressure on,
-        #     so the default path never pays the ledger scan.
+        #     Migrate records exist under migrate_on_pressure *or* after a
+        #     drain_migrate failover; only with both off is the ledger scan
+        #     skipped.
         p1 = [
             p
             for rep in self.replicas
@@ -600,7 +631,7 @@ class MoriScheduler(AgentScheduler):
             if p.has_pending
             and not p.dispatched
             and (
-                not self.config.migrate_on_pressure
+                not (self.config.migrate_on_pressure or self.config.drain_migrate)
                 or self.ledger.open_migrate(p.program_id) is None
             )
         ]
@@ -682,14 +713,14 @@ class MoriScheduler(AgentScheduler):
         return True
 
     def _try_admit_waiting(self, prog: ProgramState, now: float) -> bool:
-        target = self.balancer.place(prog, now)
-        if target is None:
+        decision = self.balancer.place(prog, now)
+        if not decision:
             return False
-        rep = self.replicas[target]
+        rep = self.replicas[decision.replica]
         if not self._make_room(rep, prog, now, allow_swap=not prog.is_new):
             return False
         self.waiting.remove(prog)
-        if prog.home_replica is not None and prog.home_replica != target:
+        if prog.home_replica is not None and prog.home_replica != decision.replica:
             prog.metrics.replica_switches += 1
         rep.gpu_admit(prog)
         prog.metrics.promotions += 1

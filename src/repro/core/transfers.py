@@ -28,8 +28,92 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
-from repro.core.ledger import Channel
-from repro.core.types import TransferCost
+from repro.core.ledger import Channel, channel_for
+from repro.core.types import Tier, TransferCost
+
+
+@dataclass(frozen=True)
+class Endpoint:
+    """One side of a KV copy: a tier on a replica."""
+
+    replica: int
+    tier: Tier
+
+
+@dataclass(frozen=True)
+class CopyRequest:
+    """Endpoint-addressed KV copy — the one shape every transfer-bearing
+    action lowers to.
+
+    ``Offload``, reloading ``Forward`` and ``Migrate`` differ only in their
+    endpoints (same-replica down-tier, same-replica up-tier, cross-replica
+    host-to-host), so executors dispatch on the *geometry* instead of the
+    action class: :attr:`kind` and :attr:`channel` are derived, and both
+    runtimes bill the channel the bytes are read from. ``nbytes`` sizes the
+    wire time; the concrete page set is bound by the executor when the job
+    reaches its channel head (a copy queued behind an offload of the same
+    program must see the pages that offload is about to produce).
+    """
+
+    src: Endpoint
+    dst: Endpoint
+    pid: str
+    nbytes: int
+    action_id: int
+
+    @property
+    def cross_replica(self) -> bool:
+        return self.src.replica != self.dst.replica
+
+    @property
+    def kind(self) -> str:
+        """Ledger record kind: ``offload`` | ``reload`` | ``migrate``."""
+        if self.cross_replica:
+            return "migrate"
+        return "reload" if self.dst.tier is Tier.GPU else "offload"
+
+    @property
+    def channel(self) -> Channel:
+        """Bill the channel the bytes are *read* from (writes are staged
+        through host DRAM, so the read side is the contended resource)."""
+        return channel_for(self.src.tier)
+
+    @property
+    def exec_replica(self) -> int:
+        """The replica whose channel queues serialize this copy — always
+        the receiving side (for a same-replica copy there is only one side;
+        a migrate contends on the destination's ingest channel)."""
+        return self.dst.replica
+
+    def job(self, payload: object = None) -> CopyJob:
+        """Lower to the queued-transfer representation."""
+        return CopyJob(
+            self.nbytes, self.action_id, self.pid, self.exec_replica,
+            self.channel, payload=payload,
+        )
+
+
+def copy_request_for(act) -> CopyRequest:
+    """Thin adapter from the action IR to the endpoint-addressed API."""
+    from repro.core.actions import Forward, Migrate, Offload
+
+    if isinstance(act, Offload):
+        src = Endpoint(act.replica, act.src_tier)
+        dst = Endpoint(act.replica, act.dst_tier)
+    elif isinstance(act, Forward):
+        # only CPU/SSD-sourced Forwards carry bytes; GPU/recompute Forwards
+        # never reach a transfer executor
+        src = Endpoint(act.replica, act.source_tier)
+        dst = Endpoint(act.replica, Tier.GPU)
+    elif isinstance(act, Migrate):
+        src = Endpoint(act.src_replica, Tier.CPU)
+        dst = Endpoint(act.dst_replica, Tier.CPU)
+    else:
+        raise TypeError(f"{type(act).__name__} carries no bytes to copy")
+    return CopyRequest(
+        src=src, dst=dst, pid=act.pid, nbytes=act.nbytes,
+        action_id=act.action_id,
+    )
 
 
 @dataclass

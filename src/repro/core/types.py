@@ -98,8 +98,15 @@ class SchedulerConfig:
     # beyond-paper: when a pending CPU-resident program cannot fit its home
     # GPU, move its DRAM copy to a roomier replica (a ``Migrate`` action)
     # instead of waiting — breaks strict affinity, so off by default. The
-    # real router rejects it (engines cannot move KV across processes yet).
+    # real router executes it as a page-granular host-to-host copy on the
+    # destination's transfer plane (requires paged engines; it raises at
+    # construction naming this knob otherwise).
     migrate_on_pressure: bool = False
+    # on replica failure, migrate its DRAM-resident programs to healthy
+    # replicas with host headroom instead of discarding them to Waiting
+    # (which costs a full recompute). Independent of migrate_on_pressure:
+    # drain migrates are emitted even when pressure migration is off.
+    drain_migrate: bool = True
     # §7.1 SSD tier, cost-aware guard (beyond the paper's proposal): a
     # program sinks to SSD only if reloading its KV from NVMe would beat
     # recomputing it — kv_bytes/ssd_bw < context_tokens/recompute_rate.

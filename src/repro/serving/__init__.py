@@ -1,20 +1,28 @@
 """Real JAX serving plane: paged KV pool, engine, async transfer plane,
-MORI router."""
+MORI router (multi-replica, with live cross-replica migration and
+drain/failover)."""
+from repro.core.balancer import PlacementDecision
+from repro.core.transfers import CopyRequest, Endpoint
 from repro.serving.engine import Completion, Engine, EngineRequest, PrefillJob
 from repro.serving.kvpool import PagePool
 from repro.serving.router import MoriRouter, RouterMetrics, snapshot_state
 from repro.serving.ssm_engine import SsmEngine
+from repro.serving.state_io import requeue_resident_slots
 from repro.serving.transfer_plane import ReplicaTransferPlane
 
 __all__ = [
     "Completion",
+    "CopyRequest",
+    "Endpoint",
     "Engine",
     "EngineRequest",
     "MoriRouter",
     "PagePool",
+    "PlacementDecision",
     "PrefillJob",
     "ReplicaTransferPlane",
     "RouterMetrics",
     "SsmEngine",
+    "requeue_resident_slots",
     "snapshot_state",
 ]

@@ -1100,3 +1100,27 @@ class Engine:
 
     def set_label(self, pid: str, label: TypeLabel) -> None:
         self.tree.restamp(pid, label)
+
+    def abort_request(self, pid: str) -> EngineRequest | None:
+        """Tear down a mid-decode slot without persisting its KV — the
+        failover path: the router requeues the returned request and a
+        healthy replica re-prefills the identical context, so no tokens
+        are lost. Slot-owned pages (prefix duplicates, decode tail) go
+        back to the free list; the shared prefix chain keeps its pages
+        and just drops this slot's holds."""
+        slot = next(
+            (s for s in self.slots.values() if s.request.program_id == pid), None
+        )
+        if slot is None:
+            return None
+        self._san_scope(f"abort_request:{pid}")
+        # retire the slot FIRST (same reachability rationale as _finish)
+        self.slots.pop(slot.slot_id)
+        self._free_slots.append(slot.slot_id)
+        self.lengths[slot.slot_id] = 0
+        if not self.dense_slots:
+            for page in slot.table[slot.owned_from:]:
+                self.pool.free_device(page)
+            self.tree.release_nodes(slot.prefix_nodes)
+        self.tree.unpin(pid)
+        return slot.request

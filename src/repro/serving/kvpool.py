@@ -257,6 +257,30 @@ class PagePool:
         )
         return dp
 
+    def import_host_page(self, src_pool: "PagePool", src_hp: int) -> int | None:
+        """Copy one host page from *another replica's* pool into this pool's
+        host tier — the cross-replica migrate primitive (dst-host ←
+        src-host). The copy is raw-bits, so the destination KV is
+        byte-identical to the source; like the staging verbs above it is
+        copy-without-free and unbilled — the committing migrate stream
+        frees the source copy and the router does the accounting."""
+        same_geometry = (
+            self.host_k.shape[0] == src_pool.host_k.shape[0]
+            and self.host_k.shape[2:] == src_pool.host_k.shape[2:]
+            and self.host_k.dtype == src_pool.host_k.dtype
+        )
+        assert same_geometry, "incompatible page geometry across replicas"
+        if src_pool._san is not None:
+            src_pool._san.on_read("host", src_hp)
+        hp = self.alloc_host()
+        if hp is None:
+            return None
+        if self._san is not None:
+            self._san.on_write("host", hp)
+        self.host_k[:, hp] = src_pool.host_k[:, src_hp]
+        self.host_v[:, hp] = src_pool.host_v[:, src_hp]
+        return hp
+
     def bill_offload(self, pages: int = 1) -> None:
         """Record ``pages`` worth of committed device→host movement."""
         self.offload_bytes += pages * self.page_bytes

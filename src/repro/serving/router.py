@@ -70,10 +70,27 @@ Action semantics on the real path:
 * ``Forward(recompute=True)`` — Waiting-tier re-admission: the program's
   stale pages (if any survived) are dropped so the engine genuinely
   re-prefills the full context.
-* ``Migrate`` — rejected: separate engine processes cannot exchange pages.
+* ``Migrate`` — cross-replica KV move, executed on the *destination*
+  replica's plane as a page-granular host→host copy
+  (:class:`~repro.serving.transfer_plane._MigrateStream`, raw-bits
+  byte-identical via ``PagePool.import_host_page``), cancellable
+  mid-stream like any offload. Requires paged engines; the router raises
+  at construction naming ``migrate_on_pressure`` otherwise.
+
+Live drain/failover: :meth:`MoriRouter.mark_failed` mid-replay aborts the
+failed replica's in-flight copies (and migrates sourced from it), tears
+down its mid-decode slots (``Engine.abort_request``) and requeues them —
+the requeued step re-prefills the identical context on a healthy replica,
+so no tokens are lost — then hands the scheduler the failure event, whose
+``drain_migrate`` pass moves host-resident KV to the healthy replica with
+the most DRAM headroom. :meth:`MoriRouter.mark_recovered` re-admits the
+replica for placement. ``replay(faults=[...])`` injects both on the
+virtual clock (same :class:`~repro.sim.engine.FaultPlan` shape the
+simulator takes).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import math
@@ -93,10 +110,10 @@ from repro.core.actions import (
     PlacementPlan,
     SetLabel,
 )
-from repro.core.transfers import CopyJob
+from repro.core.transfers import CopyJob, copy_request_for
 from repro.core.types import ProgramTrace, Tier, TransferCost
 from repro.serving.engine import Completion, Engine, EngineRequest
-from repro.serving.transfer_plane import ReplicaTransferPlane
+from repro.serving.transfer_plane import ReplicaTransferPlane, _MigrateStream
 
 #: float slack for virtual-clock due/retire comparisons
 _EPS = 1e-9
@@ -132,6 +149,15 @@ class RouterMetrics:
     # chunked prefill (zero when chunked_prefill is off)
     prefill_chunks: int = 0          # prefill_step calls executed by the pump
     prefill_interleaved_steps: int = 0  # decode steps with a prefill in flight
+    # multi-replica scale-out: cross-replica migration and drain/failover
+    migrations: int = 0              # Migrate actions executed
+    migrated_pages: int = 0          # pages landed on a migrate destination
+    drain_events: int = 0            # mark_failed calls (drain/failover)
+    requeued_slots: int = 0          # mid-flight slots requeued by failover
+    makespan_s: float = 0.0          # virtual time at which replay drained
+    # why the balancer placed where it did (copied from
+    # ReplicaBalancer.reason_counts at end of replay)
+    placement_reasons: dict = field(default_factory=dict)
     # real (wall-clock) submit-event → first-token latency per program step —
     # the paper's headline TTFT, measured on the actual execution path
     ttft_samples: list = field(default_factory=list)
@@ -201,7 +227,6 @@ class _PumpSlot:
 class _ReplayState:
     """Replay-scoped context shared by issue/submit/retire."""
 
-    rng: object
     state: dict[str, dict]
     vocab_size: int
     max_new_tokens: int
@@ -251,11 +276,26 @@ class MoriRouter:
             else pool.n_host_pages * pool.page_bytes
         )
         config = config or SchedulerConfig(tick_interval_s=5.0)
-        if config.migrate_on_pressure:
+        # cross-replica migration (pressure-driven or drain-driven) copies
+        # KV at page granularity through the pools' host staging, so it
+        # needs paged engines on both ends
+        paged = all(
+            hasattr(e, "tree")
+            and hasattr(getattr(e, "pool", None), "import_host_page")
+            for e in engines
+        )
+        if config.migrate_on_pressure and not paged:
             raise ValueError(
-                "migrate_on_pressure is simulator-only: real engine replicas "
-                "are separate processes and cannot exchange KV pages"
+                "migrate_on_pressure=True requires paged engine replicas: "
+                "cross-replica migration streams KV page-by-page through "
+                "PagePool.import_host_page, which these engines lack — "
+                "construct the router with paged Engine replicas or set "
+                "migrate_on_pressure=False"
             )
+        if config.drain_migrate and not paged:
+            # drain_migrate defaults on; degrade unpaged fleets to the
+            # discard-and-recompute failure path instead of erroring
+            config = dataclasses.replace(config, drain_migrate=False)
         self.sched = SCHEDULERS[scheduler](
             len(engines),
             TierCapacity(gpu_cap, cpu_cap, ssd_capacity_bytes),
@@ -319,6 +359,7 @@ class MoriRouter:
             ReplicaTransferPlane(
                 i, eng, xfer_cost,
                 wake=self._wake, on_committed=self._plane_committed,
+                peer_engine=lambda r: self.engines[r],
             )
             for i, eng in enumerate(engines)
         ]
@@ -438,7 +479,8 @@ class MoriRouter:
                             act.pid, plan.now
                         ):
                             self.metrics.cancelled_pages += rolled
-                            self.sched.ledger.cancel(job.action_id)
+                            if self.sched.ledger.is_open(job.action_id):
+                                self.sched.ledger.cancel(job.action_id)
                     # the logical SSD tier is backed by the host pool on the
                     # real path — freeing it frees host pages
                     tier = Tier.CPU if act.tier is Tier.SSD else act.tier
@@ -449,10 +491,7 @@ class MoriRouter:
             elif isinstance(act, CancelTransfer):
                 self._exec_cancel(act, plan.now)
             elif isinstance(act, Migrate):
-                raise RuntimeError(
-                    "Migrate reached the real router; construct the scheduler "
-                    "with migrate_on_pressure=False"
-                )
+                self._exec_migrate(act, plan.now)
         self.metrics.peak_inflight_bytes = max(
             self.metrics.peak_inflight_bytes, self.sched.ledger.in_flight_bytes()
         )
@@ -492,6 +531,25 @@ class MoriRouter:
         )
         self._ack(act.pid, act.action_id, now)
 
+    def _exec_migrate(self, act: Migrate, now: float) -> None:
+        """Cross-replica KV move. Async: a chunked copy job on the
+        *destination* replica's plane (the copy executes where it lands),
+        cancellable mid-stream like any offload. Sync: the stream runs
+        inline and acks immediately."""
+        self.metrics.migrations += 1
+        if self._async and act.nbytes > 0:
+            creq = copy_request_for(act)
+            self.planes[creq.exec_replica].enqueue_request(creq, now, act=act)
+            return
+        stream = _MigrateStream(
+            self.engines[act.src_replica], self.engines[act.dst_replica],
+            act.pid,
+        )
+        for _ in range(stream.n_units):
+            stream.copy_unit()
+        self.metrics.migrated_pages += stream.commit()
+        self._ack(act.pid, act.action_id, now)
+
     def _exec_cancel(self, act: CancelTransfer, now: float) -> None:
         if self.sync_transfers:
             return  # transfers are synchronous: never still queued
@@ -508,6 +566,8 @@ class MoriRouter:
         and acknowledge the scheduler's ledger record."""
         if kind == "offload":
             self.metrics.offloaded_pages += pages
+        elif kind == "migrate":
+            self.metrics.migrated_pages += pages
         else:
             act: Forward = job.payload.act
             if act.source_tier is Tier.SSD:
@@ -521,6 +581,72 @@ class MoriRouter:
     def _ack(self, pid: str, action_id: int, now: float) -> None:
         self.apply_plan(self.sched.on_transfer_complete(pid, action_id, now))
 
+    # ------------------------------------------------------ drain/failover
+    def mark_failed(self, replica: int, now: float) -> None:
+        """Live failover: the replica's GPU is gone, its host DRAM is still
+        readable (the drain model). In order:
+
+        1. abort every copy job this replica executes, plus any
+           cross-replica migrate elsewhere that *reads* from it, closing
+           their ledger records (staged pages roll back);
+        2. tear down its mid-flight decode/prefill slots and requeue the
+           requests (:func:`repro.serving.state_io.requeue_resident_slots`)
+           — the requeued step re-prefills the identical context on a
+           healthy replica, so the token stream loses nothing;
+        3. hand the scheduler the failure event: its ``drain_migrate``
+           pass migrates host-resident KV to healthy replicas and drops
+           the rest to the Waiting tier.
+        """
+        from repro.serving.state_io import requeue_resident_slots
+
+        self.metrics.drain_events += 1
+        if not self.sync_transfers:
+            # jobs executing on the failed plane: abort the streams (staged
+            # pages roll back) but leave their ledger records — they are
+            # billed to the failed replica, so ``replica_failed``'s
+            # drop_replica closes them, and until then a half-offloaded
+            # program still shows an *open* offload, which is exactly what
+            # makes the drain pass skip its untrustworthy DRAM copy
+            for job in list(self.planes[replica].channels.jobs()):
+                res = self.planes[replica].abort(job.action_id, now)
+                if res is not None:
+                    self.metrics.cancelled_pages += res[1]
+            # migrates elsewhere that *read* from the failed replica: abort
+            # and cancel explicitly (their records bill to the destination,
+            # which drop_replica will not touch)
+            for r, plane in enumerate(self.planes):
+                if r == replica:
+                    continue
+                for job in list(plane.channels.jobs()):
+                    task = job.payload
+                    if (
+                        task.kind == "migrate"
+                        and task.creq is not None
+                        and task.creq.src.replica == replica
+                    ):
+                        res = plane.abort(job.action_id, now)
+                        if res is not None:
+                            self.metrics.cancelled_pages += res[1]
+                            self.sched.ledger.cancel(job.action_id)
+        self.metrics.requeued_slots += requeue_resident_slots(
+            self, replica, now
+        )
+        # dispatched-but-not-yet-submitted work targeting the dead replica
+        # goes back to pending; the scheduler re-places it after the drain
+        for pid in [
+            p for p, a in self._dispatched.items() if a.replica == replica
+        ]:
+            self._dispatched.pop(pid)
+            self._dispatch_time.pop(pid, None)
+        self.apply_plan(self.sched.replica_failed(replica, now))
+
+    def mark_recovered(self, replica: int, now: float) -> None:
+        """Re-admit a recovered replica for placement. Its pools were lost
+        with the node; programs return through the normal Waiting-tier
+        recompute path as the balancer starts placing onto it again."""
+        self.sched.replica_recovered(replica)
+        self.apply_plan(self.sched.tick(now))
+
     # ------------------------------------------------------------- replay
     def replay(
         self,
@@ -529,6 +655,7 @@ class MoriRouter:
         vocab_size: int,
         max_new_tokens: int = 8,
         seed: int = 0,
+        faults: "list | None" = None,
     ) -> RouterMetrics:
         """Replay traces concurrently on the virtual clock.
 
@@ -536,10 +663,14 @@ class MoriRouter:
         decode); ``serial_decode=True`` reproduces the pre-pump serialized
         order, running each dispatched request to completion before the
         next event.
+
+        ``faults`` injects live drain/failover on the virtual clock: each
+        entry (duck-typed like :class:`~repro.sim.engine.FaultPlan` —
+        ``replica`` / ``fail_at`` / optional ``recover_at``) triggers
+        :meth:`mark_failed` and :meth:`mark_recovered` at those times.
         """
         import random
 
-        rng = random.Random(seed)
         self._ttft_start.clear()
         q: list[tuple[float, int, object]] = []
         seq = itertools.count()
@@ -577,12 +708,27 @@ class MoriRouter:
                 "max_ctx": max_ctx,
                 "max_steps": len(tr.steps),
                 "completed_steps": 0,
+                # per-program stream (string seeding is hash-stable): the
+                # synthesized context is a pure function of the program's
+                # own history, never of cross-program admission order —
+                # so a drained-and-requeued step regrows the *identical*
+                # context, which is what makes failover token-preserving
+                # and testable (output_log equality vs an undisturbed run)
+                "rng": random.Random(f"{seed}:{pid}"),
             }
             self.sched.program_arrived(pid, self.kv_bytes_per_token, 0.0)
             push(0.0, lambda t, p=pid: self._issue(p, 0, t))
 
+        for f in faults or []:
+            push(f.fail_at, lambda t, fr=f: self.mark_failed(fr.replica, t))
+            if getattr(f, "recover_at", None) is not None:
+                push(
+                    f.recover_at,
+                    lambda t, fr=f: self.mark_recovered(fr.replica, t),
+                )
+
         self._rs = _ReplayState(
-            rng=rng, state=state, vocab_size=vocab_size,
+            state=state, vocab_size=vocab_size,
             max_new_tokens=max_new_tokens, traces=list(traces),
         )
         drain = self._drain_serial if self.serial_decode else self._pump_all
@@ -657,6 +803,8 @@ class MoriRouter:
         self._jitaudit_end_of_replay()
         self._push = None
         self._rs = None
+        self.metrics.makespan_s = now
+        self.metrics.placement_reasons = dict(self.sched.balancer.reason_counts)
         return self.metrics
 
     # --------------------------------------------------- replay event hooks
@@ -672,7 +820,7 @@ class MoriRouter:
         )
         grow = want - st["ctx_len"]
         st["tokens"].extend(
-            rs.rng.randrange(2, rs.vocab_size) for _ in range(grow)
+            st["rng"].randrange(2, rs.vocab_size) for _ in range(grow)
         )
         st["ctx_len"] = want
         req = EngineRequest(
@@ -954,6 +1102,7 @@ class MoriRouter:
             m.offloaded_pages, m.reloaded_pages, m.nvme_reloaded_pages,
             m.cancelled_pages, m.cancelled_offloads, m.gated_events,
             m.recompute_submits, m.prefill_chunks,
+            m.migrations, m.migrated_pages, m.requeued_slots,
             sum(e.steps for e in self.engines),
             sum(p.chunks_executed for p in self.planes),
         )

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from pathlib import Path
 
 from repro.core.types import Tier, TypeLabel
@@ -72,6 +73,41 @@ def control_plane_state(router) -> dict:
         },
         "replicas": replicas,
     }
+
+
+def requeue_resident_slots(router, replica: int, now: float) -> int:
+    """Tear down a failed replica's mid-flight decode/prefill slots and
+    return their requests to the router's pending queue — the live-drain
+    counterpart of :func:`restore_snapshot`'s was-resident handling.
+
+    Each slot's engine-side state is released (``cancel_prefill`` for a
+    slot still mid-prefill, ``Engine.abort_request`` for a decoding one;
+    a slot whose decode already finished engine-side holds no pages and
+    needs no teardown) and its ``(request, step_idx)`` goes back to
+    ``router._pending``. The requeued step re-prefills the *identical*
+    token context on whichever healthy replica the scheduler re-places it
+    — decode is deterministic in the context, so the program's token
+    stream is byte-identical to an undisturbed run: zero tokens lost.
+
+    Returns the number of slots requeued.
+    """
+    slots = router._pump_slots[replica]
+    eng = router.engines[replica]
+    n = 0
+    for slot in sorted(slots.values(), key=lambda s: s.seq):
+        if slot.prefilling:
+            eng.cancel_prefill(slot.prefill)
+        elif slot.done is None and hasattr(eng, "abort_request"):
+            eng.abort_request(slot.pid)
+        router._pending[slot.pid] = (slot.req, slot.step_idx)
+        # restart the TTFT clock only if the first token never landed
+        # (the re-run's latency is what a caller would actually see)
+        router._ttft_start.setdefault(
+            (slot.pid, slot.step_idx), time.perf_counter()
+        )
+        n += 1
+    slots.clear()
+    return n
 
 
 def save_snapshot(router, path: str | os.PathLike) -> Path:

@@ -14,13 +14,28 @@ scheduler's ``CancelTransfer`` path genuinely aborts a partially-streamed
 copy: staged host pages are rolled back and the program re-admits warm
 off its untouched device pages.
 
-Two streaming strategies cover both real engines:
+Admission is *endpoint-addressed*: every transfer-bearing action lowers
+to a :class:`~repro.core.transfers.CopyRequest` (``src``/``dst`` =
+``Endpoint(replica, tier)``), and the plane dispatches on the copy's
+geometry — same-replica down-tier (offload), same-replica up-tier
+(reload), cross-replica (migrate) — instead of on the action class.
+
+Three streaming strategies cover the engines and copy shapes:
 
 * :class:`_PagedStream` (dense :class:`~repro.serving.engine.Engine`) —
   copies one radix page per chunk through the pool's copy-without-free
   primitives; the *move* commits atomically at job completion (free
   device pages / flip node pointers), so an abort at chunk *k* only has
   *k* staged host pages to discard.
+* :class:`_MigrateStream` — the cross-replica shape: one page per chunk
+  from the source replica's host tier (device-only pages are first
+  staged through the source host) into the destination pool via
+  :meth:`~repro.serving.kvpool.PagePool.import_host_page` (raw-bits, so
+  the landed KV is byte-identical). Commit installs the imported pages
+  as a host-resident radix chain on the destination
+  (:meth:`~repro.core.radix_tree.TypedRadixTree.insert_host_chain`) and
+  retires the source copies; an abort discards the imports and leaves
+  the source replica untouched.
 * :class:`_AtomicStream` (:class:`~repro.serving.ssm_engine.SsmEngine`
   and anything else bundle-granular) — the whole verb executes at job
   completion; an abort before that moved nothing and rolls back nothing.
@@ -40,10 +55,13 @@ import heapq
 import itertools
 from typing import Callable
 
-from repro.core.actions import Forward, Offload
-from repro.core.ledger import channel_for
-from repro.core.transfers import CopyJob, TransferChannels
-from repro.core.types import Tier, TransferCost
+from repro.core.transfers import (
+    CopyJob,
+    CopyRequest,
+    TransferChannels,
+    copy_request_for,
+)
+from repro.core.types import Tier, TransferCost, TypeLabel
 
 
 class _PagedStream:
@@ -227,15 +245,152 @@ class _AtomicStream:
         return 0  # nothing moved before commit
 
 
+class _MigrateStream:
+    """Page-granular cross-replica move: source host tier → destination
+    host tier, one page per chunk, through the pools' raw-bits
+    copy-without-free primitives. Device-only pages on the source (e.g. a
+    shared prefix that was never offloaded) are first staged through the
+    source host tier. Commit installs the imported pages as a
+    host-resident radix chain on the destination and retires the source
+    copies (move semantics); an abort discards the imports and staging
+    and leaves the source replica untouched — the same
+    cancellable-mid-stream contract as :class:`_PagedStream`."""
+
+    kind = "migrate"
+
+    def __init__(self, src_engine, dst_engine, pid: str):
+        self.src = src_engine
+        self.dst = dst_engine
+        self.pid = pid
+        self.nodes = list(src_engine.tree.program_nodes(pid))
+        # (src node, imported dst host page, src staging page or None)
+        self.copied: list[tuple[object, int, int | None]] = []
+        self._next = 0
+        self._stopped = False
+        # protect the source chain from engine-level eviction while the
+        # copy is in flight (balanced by unpin in commit/abort)
+        src_engine.tree.pin(pid)
+        # kvsan: two pools, two sanitizers — hold the source pages on the
+        # source sanitizer and each imported/staged page as it appears
+        self._src_san = src_engine.pool._san
+        self._dst_san = dst_engine.pool._san
+        self._src_holds: list[int] = []
+        self._dst_holds: list[int] = []
+        if self._src_san is not None:
+            host_src = [n.host_page for n in self.nodes if n.host_page is not None]
+            dev_src = [
+                n.device_page for n in self.nodes
+                if n.host_page is None and n.device_page is not None
+            ]
+            if host_src:
+                self._src_holds.append(
+                    self._src_san.add_hold("host", host_src, f"migrate src:{pid}")
+                )
+            if dev_src:
+                self._src_holds.append(
+                    self._src_san.add_hold("dev", dev_src, f"migrate src:{pid}")
+                )
+
+    @property
+    def n_units(self) -> int:
+        return len(self.nodes)
+
+    def copy_unit(self) -> None:
+        """Import the next page into the destination pool. The landed
+        chain must stay contiguous from the prefix root, so the first
+        page that cannot be sourced or imported stops the stream — commit
+        lands the contiguous prefix copied so far."""
+        if self._stopped or self._next >= len(self.nodes):
+            return
+        node = self.nodes[self._next]
+        self._next += 1
+        staging = None
+        src_hp = node.host_page
+        if src_hp is None:
+            if node.device_page is None:
+                self._stopped = True
+                return
+            # device-only page: stage through the source host tier first
+            self.src._ensure_host_page()
+            staging = self.src.pool.copy_page_to_host(node.device_page)
+            if staging is None:
+                self._stopped = True
+                return
+            if self._src_san is not None:
+                self._src_holds.append(self._src_san.add_hold(
+                    "host", [staging], f"migrate staging:{self.pid}"
+                ))
+            src_hp = staging
+        self.dst._ensure_host_page()
+        hp = self.dst.pool.import_host_page(self.src.pool, src_hp)
+        if hp is None:
+            self._stopped = True
+            return
+        if self._dst_san is not None:
+            self._dst_holds.append(self._dst_san.add_hold(
+                "host", [hp], f"migrate import:{self.pid}"
+            ))
+        self.copied.append((node, hp, staging))
+
+    def _settle_holds(self) -> None:
+        if self._src_san is not None:
+            self._src_san.set_scope(f"migrate settle:{self.pid}")
+            for tok in self._src_holds:
+                self._src_san.drop_hold(tok)
+            self._src_holds = []
+        if self._dst_san is not None:
+            self._dst_san.set_scope(f"migrate settle:{self.pid}")
+            for tok in self._dst_holds:
+                self._dst_san.drop_hold(tok)
+            self._dst_holds = []
+
+    def commit(self) -> int:
+        """Install the imported chain on the destination and retire the
+        source copies."""
+        self._settle_holds()
+        for _node, _hp, staging in self.copied:
+            if staging is not None:
+                self.src.pool.free_host(staging)
+        tokens = [t for node, _, _ in self.copied for t in node.tokens]
+        pages = [hp for _, hp, _ in self.copied]
+        if pages:
+            _nodes, duplicates = self.dst.tree.insert_host_chain(
+                tokens, pages, self.pid, TypeLabel.IDLE
+            )
+            for hp in duplicates:
+                self.dst.pool.free_host(hp)
+        self.src.tree.unpin(self.pid)
+        # retire the source copies: frees refcount-0 pages on either tier
+        # and releases the program entry once nothing is resident. Pages a
+        # live decode on the source still pins are left alone — for those
+        # the migrate degrades to a copy, exactly like a shared-prefix
+        # offload keeping its device page.
+        self.src.discard_program(self.pid, Tier.CPU)
+        self.src.discard_program(self.pid, Tier.GPU)
+        return len(pages)
+
+    def abort(self) -> int:
+        """Mid-stream cancel: drop the imports and staging; the source
+        replica's KV is intact exactly where it was."""
+        self._settle_holds()
+        for _node, hp, staging in self.copied:
+            self.dst.pool.free_host(hp)
+            if staging is not None:
+                self.src.pool.free_host(staging)
+        self.src.tree.unpin(self.pid)
+        return len(self.copied)
+
+
 class _PlaneTask:
     """Runtime payload riding on a CopyJob."""
 
-    __slots__ = ("kind", "act", "stream")
+    __slots__ = ("kind", "act", "creq", "stream")
 
-    def __init__(self, kind: str, act):
+    def __init__(self, kind: str, act, creq: CopyRequest | None = None):
         self.kind = kind
         self.act = act
-        self.stream: _PagedStream | _AtomicStream | None = None
+        self.creq = creq
+        self.stream: _PagedStream | _AtomicStream | _MigrateStream | None = None
 
 
 class ReplicaTransferPlane:
@@ -255,11 +410,15 @@ class ReplicaTransferPlane:
         *,
         wake: Callable[[float], None],
         on_committed: Callable[[CopyJob, str, int, float], None],
+        peer_engine: Callable[[int], object] | None = None,
     ):
         self.replica_id = replica_id
         self.engine = engine
         self.wake = wake
         self.on_committed = on_committed
+        # resolver for cross-replica copies: replica id -> that replica's
+        # engine (installed by the router; a single-replica plane has none)
+        self.peer_engine = peer_engine
         # monotone progress counter the router's stall guard reads: every
         # executed chunk tick counts, whether or not its job ever commits
         self.chunks_executed = 0
@@ -287,18 +446,19 @@ class ReplicaTransferPlane:
 
     # ------------------------------------------------------------ admission
     def enqueue(self, act, now: float) -> None:
-        if isinstance(act, Offload):
-            task = _PlaneTask("offload", act)
-            channel = channel_for(act.src_tier)
-        else:
-            assert isinstance(act, Forward) and act.source_tier in (Tier.CPU, Tier.SSD)
-            task = _PlaneTask("reload", act)
-            channel = channel_for(act.source_tier)
-        job = CopyJob(
-            act.nbytes, act.action_id, act.pid, self.replica_id,
-            channel, payload=task,
+        """Thin adapter from the action IR: lower to a CopyRequest."""
+        self.enqueue_request(copy_request_for(act), now, act=act)
+
+    def enqueue_request(self, creq: CopyRequest, now: float, act=None) -> None:
+        """Endpoint-addressed admission: the request's geometry picks the
+        kind and channel; this plane must be the executing (destination)
+        replica."""
+        assert creq.exec_replica == self.replica_id, (
+            f"copy executes on replica {creq.exec_replica}, "
+            f"enqueued on plane {self.replica_id}"
         )
-        self.channels.enqueue(job, now)
+        task = _PlaneTask(creq.kind, act, creq)
+        self.channels.enqueue(creq.job(payload=task), now)
 
     # ------------------------------------------------------- job lifecycle
     def _job_start(self, job: CopyJob, now: float) -> None:
@@ -306,7 +466,15 @@ class ReplicaTransferPlane:
         enqueue: a reload queued behind the same program's offload must see
         the host pages that offload's commit is about to produce."""
         task: _PlaneTask = job.payload
-        if hasattr(self.engine, "tree") and hasattr(
+        if task.kind == "migrate":
+            if self.peer_engine is None:
+                raise RuntimeError(
+                    "cross-replica copy enqueued on a plane with no "
+                    "peer_engine resolver"
+                )
+            src_engine = self.peer_engine(task.creq.src.replica)
+            task.stream = _MigrateStream(src_engine, self.engine, job.pid)
+        elif hasattr(self.engine, "tree") and hasattr(
             getattr(self.engine, "pool", None), "copy_page_to_host"
         ):
             task.stream = _PagedStream(self.engine, job.pid, task.kind)

@@ -14,9 +14,11 @@ simulator executes it through :meth:`Simulation.apply_plan`, and each
 finished transfer is acknowledged back via
 ``scheduler.on_transfer_complete`` — the same plan/ack protocol the real
 JAX router speaks, so MORI and every baseline run identical code in both
-worlds. Transfer sizing and channel choice come from the actions themselves
-(``Offload.dst_tier``, ``Forward.source_tier``, ``.nbytes``), not from
-simulator-side bookkeeping.
+worlds. Every transfer-bearing action (``Offload``, reloading ``Forward``,
+``Migrate``) is lowered through the endpoint-addressed
+:class:`~repro.core.transfers.CopyRequest` API, so sizing, channel choice
+and the executing replica come from the copy's *endpoints*, not from
+per-action-kind simulator code.
 
 The PCIe/NVMe queue model itself lives in ``repro.core.transfers``
 (:class:`TransferChannels`) and is shared with the real serving path's
@@ -45,8 +47,7 @@ from repro.core.actions import (
     PlacementPlan,
     SetLabel,
 )
-from repro.core.ledger import Channel, channel_for
-from repro.core.transfers import CopyJob, TransferChannels
+from repro.core.transfers import CopyJob, TransferChannels, copy_request_for
 from repro.core.types import ProgramTrace, Tier, TransferCost
 from repro.sim.hardware import HwConfig
 from repro.sim.metrics import SimResult, percentile
@@ -360,26 +361,27 @@ class Simulation:
             self.reload_forwards += 1
             req.reload_bytes = act.nbytes
             # SSD-sourced reloads (§7.1 extension) bill the NVMe channel
-            rep.channels.enqueue(
-                CopyJob(act.nbytes, act.action_id, act.pid, act.replica,
-                        channel_for(act.source_tier), payload=req),
-                self.now,
-            )
+            # (CopyRequest.channel reads it off the source endpoint)
+            self._exec_copy(act, payload=req)
         else:
             self.warm_forwards += 1
             rep.enqueue_prefill(req, self.now)
 
-    def _exec_offload(self, act: Offload) -> None:
-        rep = self.replicas[act.replica]
-        if not rep.alive or act.nbytes <= 0:
-            return
-        # writes are staged through host DRAM: the contended channel is the
-        # one the bytes are read from; NVMe stays reserved for reloads
-        rep.channels.enqueue(
-            CopyJob(act.nbytes, act.action_id, act.pid, act.replica,
-                    channel_for(act.src_tier)),
-            self.now,
+    def _exec_copy(self, act, payload: object = None) -> None:
+        """One executor for every transfer-bearing action: lower to the
+        endpoint-addressed :class:`CopyRequest` and enqueue on the replica
+        whose channel serializes the copy — the channel billed and the
+        executing side are derived from the endpoints, not the action
+        class."""
+        creq = copy_request_for(act)
+        self.replicas[creq.exec_replica].channels.enqueue(
+            creq.job(payload), self.now
         )
+
+    def _exec_offload(self, act: Offload) -> None:
+        if not self.replicas[act.replica].alive or act.nbytes <= 0:
+            return
+        self._exec_copy(act)
 
     def _exec_discard(self, act: Discard) -> None:
         """An evicted program's still-queued transfers must not outlive
@@ -400,17 +402,12 @@ class Simulation:
             self.cancelled_transfers += 1
 
     def _exec_migrate(self, act: Migrate) -> None:
-        """Cross-replica DRAM move: modeled as one transfer on the
-        destination replica's PCIe/ingest channel."""
-        rep = self.replicas[act.dst_replica]
-        if not rep.alive or act.nbytes <= 0:
+        """Cross-replica DRAM move: serialized on the destination replica's
+        PCIe/ingest channel (``CopyRequest.exec_replica``)."""
+        if not self.replicas[act.dst_replica].alive or act.nbytes <= 0:
             return
         self.migrations += 1
-        rep.channels.enqueue(
-            CopyJob(act.nbytes, act.action_id, act.pid, act.dst_replica,
-                    Channel.PCIE),
-            self.now,
-        )
+        self._exec_copy(act)
 
     # ------------------------------------------------------------ clients
     def _start_trace(self, slot: int, now: float) -> None:

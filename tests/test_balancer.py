@@ -1,18 +1,19 @@
 """ReplicaBalancer unit coverage: most-available-capacity placement,
 tie-breaking, the mark_failed/mark_recovered health paths (including the
-all-replicas-failed edge), and the beyond-paper straggler-penalty
-discount — none of which had dedicated tests before."""
+all-replicas-failed edge), the beyond-paper straggler-penalty discount,
+and the typed :class:`PlacementDecision` result (replica + reason) the
+router surfaces in its metrics."""
 from __future__ import annotations
 
-from repro.core.balancer import ReplicaBalancer
+from repro.core.balancer import PLACEMENT_REASONS, PlacementDecision, ReplicaBalancer
 from repro.core.program import ProgramState
 from repro.core.tiers import ReplicaTiers
 from repro.core.types import SchedulerConfig, TierCapacity
 
 
-def make_balancer(frees, *, penalty=0.0):
+def make_balancer(frees, *, penalty=0.0, cpu=0):
     replicas = [
-        ReplicaTiers(replica_id=i, capacity=TierCapacity(free, 0))
+        ReplicaTiers(replica_id=i, capacity=TierCapacity(free, cpu))
         for i, free in enumerate(frees)
     ]
     cfg = SchedulerConfig(straggler_penalty=penalty)
@@ -28,48 +29,122 @@ def prog(tokens=10, kv_bytes_per_token=100):
 class TestPlacement:
     def test_picks_most_available_capacity(self):
         bal, _ = make_balancer([1_000, 50_000, 30_000])
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
 
     def test_capacity_accounts_for_admitted_programs(self):
         bal, reps = make_balancer([50_000, 50_000])
         reps[0].gpu_admit(prog(tokens=400))      # 40k used on replica 0
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
 
     def test_tie_breaks_to_highest_replica_id(self):
         # equal effective capacity sorts (free, replica_id) descending:
         # the documented deterministic tie-break is the highest id
         bal, _ = make_balancer([50_000, 50_000])
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
 
     def test_none_when_nothing_fits(self):
         bal, _ = make_balancer([500, 900])       # prog needs 1000 bytes
-        assert bal.place(prog(), 0.0) is None
+        assert bal.place(prog(), 0.0).replica is None
+
+
+class TestDecision:
+    """The typed PlacementDecision: truthiness, reasons, and the counter."""
+
+    def test_truthiness_follows_placement(self):
+        bal, _ = make_balancer([50_000, 10_000])
+        assert bal.place(prog(), 0.0)
+        assert not bal.place(prog(tokens=10_000), 0.0)
+
+    def test_reason_most_available(self):
+        bal, _ = make_balancer([1_000, 50_000])
+        d = bal.place(prog(), 0.0)
+        assert d == PlacementDecision(1, "most-available")
+
+    def test_reason_tie_break(self):
+        bal, _ = make_balancer([50_000, 50_000])
+        d = bal.place(prog(), 0.0)
+        assert (d.replica, d.reason) == (1, "tie-break")
+
+    def test_reason_no_capacity(self):
+        bal, _ = make_balancer([500])
+        d = bal.place(prog(), 0.0)
+        assert (d.replica, d.reason) == (None, "no-capacity")
+
+    def test_reason_no_healthy_replica(self):
+        bal, _ = make_balancer([50_000])
+        bal.mark_failed(0)
+        d = bal.place(prog(), 0.0)
+        assert (d.replica, d.reason) == (None, "no-healthy-replica")
+
+    def test_reason_straggler_discount(self):
+        # replica 1 has the most raw free HBM but a 10x EWMA step latency;
+        # the discount flips the winner to replica 0 and says why
+        bal, reps = make_balancer([50_000, 60_000, 45_000], penalty=0.5)
+        reps[0].ewma_step_latency_s = 0.1
+        reps[1].ewma_step_latency_s = 1.0
+        reps[2].ewma_step_latency_s = 0.1
+        d = bal.place(prog(), 0.0)
+        assert (d.replica, d.reason) == (0, "straggler-discount")
+
+    def test_reason_drain_target(self):
+        bal, _ = make_balancer([10_000, 10_000], cpu=50_000)
+        d = bal.place_drain(prog(), 0.0)
+        assert (d.replica, d.reason) == (1, "drain-target")
+
+    def test_drain_target_needs_host_headroom(self):
+        bal, _ = make_balancer([50_000, 50_000], cpu=500)
+        d = bal.place_drain(prog(), 0.0)
+        assert (d.replica, d.reason) == (None, "no-capacity")
+
+    def test_drain_skips_failed_replicas(self):
+        bal, _ = make_balancer([10_000, 10_000], cpu=50_000)
+        bal.mark_failed(1)
+        assert bal.place_drain(prog(), 0.0).replica == 0
+        bal.mark_failed(0)
+        assert bal.place_drain(prog(), 0.0).reason == "no-healthy-replica"
+
+    def test_reason_counts_accumulate(self):
+        bal, _ = make_balancer([1_000, 50_000])
+        bal.place(prog(), 0.0)
+        bal.place(prog(), 0.0)
+        bal.place(prog(tokens=10_000), 0.0)
+        assert bal.reason_counts["most-available"] == 2
+        assert bal.reason_counts["no-capacity"] == 1
+
+    def test_every_emitted_reason_is_documented(self):
+        bal, _ = make_balancer([50_000, 50_000], cpu=1_000)
+        bal.place(prog(), 0.0)
+        bal.place_drain(prog(), 0.0)
+        bal.mark_failed(0)
+        bal.mark_failed(1)
+        bal.place(prog(), 0.0)
+        assert set(bal.reason_counts) <= set(PLACEMENT_REASONS)
 
 
 class TestHealth:
     def test_failed_replica_excluded_until_recovered(self):
         bal, _ = make_balancer([10_000, 50_000])
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
         bal.mark_failed(1)
-        assert bal.place(prog(), 0.0) == 0
+        assert bal.place(prog(), 0.0).replica == 0
         bal.mark_recovered(1)
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
 
     def test_all_replicas_failed_places_nowhere(self):
         bal, _ = make_balancer([10_000, 50_000])
         bal.mark_failed(0)
         bal.mark_failed(1)
         assert bal.healthy() == []
-        assert bal.place(prog(), 0.0) is None
+        assert bal.place(prog(), 0.0).replica is None
 
     def test_mark_failed_is_idempotent(self):
         bal, _ = make_balancer([10_000, 50_000])
         bal.mark_failed(1)
         bal.mark_failed(1)                       # double-fail is harmless
-        assert bal.place(prog(), 0.0) == 0
+        assert bal.place(prog(), 0.0).replica == 0
         bal.mark_recovered(1)
         bal.mark_recovered(1)                    # as is double-recover
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
 
 
 class TestStragglerPenalty:
@@ -85,21 +160,21 @@ class TestStragglerPenalty:
     def test_discount_biases_away_from_straggler(self):
         bal, _ = self._slow_fleet(penalty=0.5)
         # without the discount the (free, id) tie-break would pick 2
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
 
     def test_zero_penalty_ignores_latency(self):
         bal, _ = self._slow_fleet(penalty=0.0)
-        assert bal.place(prog(), 0.0) == 2       # plain capacity tie-break
+        assert bal.place(prog(), 0.0).replica == 2  # plain capacity tie-break
 
     def test_extreme_penalty_clamps_at_zero_capacity(self):
         # slowdown 9x with penalty 10 would go deeply negative without the
         # clamp; the straggler must still never beat a healthy replica,
         # and a fleet of one straggler still places (its own median)
         bal, _ = self._slow_fleet(penalty=10.0)
-        assert bal.place(prog(), 0.0) == 1
+        assert bal.place(prog(), 0.0).replica == 1
         bal.mark_failed(0)
         bal.mark_failed(1)
-        assert bal.place(prog(), 0.0) == 2       # median of itself: no discount
+        assert bal.place(prog(), 0.0).replica == 2  # median of itself: no discount
 
     def test_fully_discounted_straggler_defers_placement(self):
         """With the healthy replicas full and the straggler's effective
@@ -109,4 +184,4 @@ class TestStragglerPenalty:
         bal, reps = self._slow_fleet(penalty=0.5)
         reps[0].gpu_admit(prog(tokens=495))
         reps[1].gpu_admit(prog(tokens=495))      # 500 bytes free each
-        assert bal.place(prog(), 0.0) is None
+        assert bal.place(prog(), 0.0).replica is None

@@ -15,6 +15,7 @@ from benchmarks import (
     chunked_prefill,
     churn,
     continuous_batching,
+    kv_quant,
     multi_replica,
     paged_decode,
     phase_cdf,
@@ -43,6 +44,7 @@ SECTIONS = [
     ("continuous_batching", continuous_batching.main),
     ("chunked_prefill", chunked_prefill.main),
     ("multi_replica_real", multi_replica.real_main),
+    ("kv_quant", kv_quant.main),
 ]
 
 

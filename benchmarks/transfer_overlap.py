@@ -23,13 +23,15 @@ def real_path_rows() -> list[dict]:
     from repro.configs import get_config
     from repro.core import SchedulerConfig
     from repro.core.types import TransferCost
+    from repro.kernels import kv_quant
     from repro.models import Model, materialize
     from repro.serving import Engine, MoriRouter
     from repro.traces import burst_cancel_corpus
 
     cfg = get_config("qwen1.5-0.5b").reduced()
     params = materialize(Model(cfg).describe(), seed=0)
-    kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    kvb = kv_quant.token_wire_bytes(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
     offload_bytes = 64 * kvb  # p1's materialized KV at demotion time
     cases = [
         ("async-slow-link", False, offload_bytes / 20.0),   # 20 s: cancelled

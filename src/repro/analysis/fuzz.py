@@ -108,9 +108,11 @@ def _make_knobs(rng: random.Random) -> dict:
 def _build_router(knobs: dict, cfg, params, *, audit: bool = False):
     from repro.core import SchedulerConfig
     from repro.core.types import TransferCost
+    from repro.kernels import kv_quant
     from repro.serving import Engine, MoriRouter
 
-    kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    kvb = kv_quant.token_wire_bytes(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
     engine = Engine(
         cfg, params, page_tokens=8, n_device_pages=256, n_host_pages=128,
         max_slots=knobs["max_slots"], max_seq=256,

@@ -242,6 +242,20 @@ class PageSanitizer:
             )
         self._page_event(tier, page, "write")
 
+    def on_format(self, tier: str, page: int, fmt: str) -> None:
+        """A page was (re)written in a declared tier format — a lifecycle
+        event like alloc/write: format transitions (bf16→int8 on offload,
+        int8→bf16 on reload to a full-precision pool) land in the event
+        ring so a post-mortem shows *what representation* a corrupted page
+        last held, and writing a format into a FREE page is the same hard
+        error as any other write-after-free."""
+        if self._state[tier][page] == _FREE:
+            self._raise(
+                f"format write ({fmt}) to FREE {tier} page {page}; "
+                f"last event: {self._last_event(tier, page)}"
+            )
+        self._page_event(tier, page, f"format[{fmt}]")
+
     def on_append(self, tier: str, page: int, offset: int) -> None:
         if not (0 <= offset < self.page_tokens):
             self._raise(

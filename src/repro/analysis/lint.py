@@ -40,6 +40,19 @@ flagged line):
   when the call returns; reading it afterwards is a use-after-donate.
   (The compile-plane side — whether XLA actually honored the donation —
   is ``python -m repro.analysis.jitaudit``.)
+* **KV008 format-aware-sizing** — KV pages carry per-tier formats
+  (device bf16/int8, offload bf16/int8), so byte math must go through
+  the format-aware helpers (:mod:`repro.kernels.kv_quant`,
+  ``PagePool.host_page_bytes``, ``ProgramState.host_kv_bytes`` /
+  ``host_bytes_per_token``). Two shapes are flagged: (a) a
+  multiplication that prices a host/offload/wire quantity with a
+  *device-format* size attribute (``page_bytes`` / ``kv_bytes`` /
+  ``kv_bytes_per_token``) — the exact bug class where an int8 offload
+  is billed at bf16 size; (b) a byte-quantity expression that
+  multiplies model geometry (``num_layers``/``num_kv_heads``/
+  ``head_dim``) by a literal ``2`` — a silent bf16 bytes-per-element
+  assumption. Suppress deliberate device-side math with
+  ``# lint: kv008-ok``.
 """
 from __future__ import annotations
 
@@ -634,6 +647,120 @@ def check_jit_shape_branch(
 
 
 # --------------------------------------------------------------------------
+# KV008 format-aware-sizing
+# --------------------------------------------------------------------------
+#: device-format size attributes — pricing a host/offload/wire quantity with
+#: one of these bills an int8 copy at bf16 size
+_KV008_DEVICE_ATTRS = frozenset({"page_bytes", "kv_bytes", "kv_bytes_per_token"})
+#: identifier fragments that mark a statement as pricing an *offload-side*
+#: quantity (host tier budgets, wire transfers, NVMe reloads)
+_KV008_OFFLOAD_HINTS = (
+    "host", "cpu", "ssd", "wire", "offload", "reload", "nvme", "dram",
+)
+_KV008_GEOMETRY = frozenset({"num_layers", "num_kv_heads", "num_heads",
+                             "head_dim"})
+
+
+def _kv008_exempt(path: str) -> bool:
+    """The sizing helpers themselves are the one sanctioned place for raw
+    bytes-per-element arithmetic."""
+    p = path.replace(os.sep, "/")
+    return p.endswith("repro/kernels/kv_quant.py")
+
+
+def _own_exprs(stmt: ast.stmt) -> list[ast.AST]:
+    """A statement's direct expression children — excludes nested
+    statements, so each expression is examined exactly once, in the
+    context of the statement that actually spells it."""
+    return [
+        c for c in ast.iter_child_nodes(stmt) if not isinstance(c, ast.stmt)
+    ]
+
+
+def _idents(nodes: list[ast.AST]) -> set[str]:
+    """Every identifier fragment in the expressions, lowercased."""
+    idents: set[str] = set()
+    for root in nodes:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Name):
+                idents.add(node.id.lower())
+            elif isinstance(node, ast.Attribute):
+                idents.add(node.attr.lower())
+    return idents
+
+
+def _topmost_mults(exprs: list[ast.AST]) -> list[ast.BinOp]:
+    """Multiplication subtrees, outermost chain only — ``a * b * c``
+    reports once, not once per nested BinOp."""
+    mults = [
+        n for root in exprs for n in ast.walk(root)
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult)
+    ]
+    inner = {
+        id(side)
+        for m in mults
+        for side in (m.left, m.right)
+        if isinstance(side, ast.BinOp) and isinstance(side.op, ast.Mult)
+    }
+    return [m for m in mults if id(m) not in inner]
+
+
+def check_format_aware_sizing(
+    path: str, tree: ast.Module, lines: list[str], registry
+) -> list[Violation]:
+    del registry
+    if _kv008_exempt(path):
+        return []
+    out: list[Violation] = []
+    for stmt in ast.walk(tree):
+        if not isinstance(stmt, ast.stmt):
+            continue
+        exprs = _own_exprs(stmt)
+        mults = _topmost_mults(exprs)
+        if not mults:
+            continue
+        ctx = _idents(exprs)
+        hinted = any(any(h in ident for ident in ctx)
+                     for h in _KV008_OFFLOAD_HINTS)
+        byteish = any("bytes" in ident for ident in ctx)
+        for m in mults:
+            sub_attrs = {
+                n.attr for n in ast.walk(m) if isinstance(n, ast.Attribute)
+            }
+            sub_names = sub_attrs | {
+                n.id for n in ast.walk(m) if isinstance(n, ast.Name)
+            }
+            has_two = any(
+                isinstance(n, ast.Constant) and n.value == 2
+                for n in ast.walk(m)
+            )
+            if _suppressed(lines, m.lineno, "kv008"):
+                continue
+            dev = sub_attrs & _KV008_DEVICE_ATTRS
+            if dev and hinted:
+                out.append(Violation(
+                    path, m.lineno, "KV008",
+                    f"host/offload/wire quantity priced with device-format "
+                    f"`{sorted(dev)[0]}` — with an int8 offload format this "
+                    f"bills the wrong byte count; use host_page_bytes / "
+                    f"host_kv_bytes / kv_quant wire helpers (or mark "
+                    f"`# lint: kv008-ok` if device-side math is intended)",
+                ))
+            elif has_two and (
+                (byteish and sub_names & _KV008_GEOMETRY)
+                or len(sub_names & _KV008_GEOMETRY) >= 2
+            ):
+                out.append(Violation(
+                    path, m.lineno, "KV008",
+                    f"byte sizing multiplies model geometry by literal 2 — "
+                    f"a bf16 bytes-per-element assumption that breaks under "
+                    f"int8 tiers; use kv_quant.bytes_per_element / "
+                    f"token_wire_bytes (or mark `# lint: kv008-ok`)",
+                ))
+    return out
+
+
+# --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
 RULES = (
@@ -644,6 +771,7 @@ RULES = (
     check_pin_paired,
     check_wall_clock,
     check_jit_shape_branch,
+    check_format_aware_sizing,
 )
 
 
@@ -690,7 +818,7 @@ def run(paths) -> list[Violation]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="repo-specific AST lint (KV001-KV007)",
+        description="repo-specific AST lint (KV001-KV008)",
     )
     ap.add_argument("paths", nargs="*", help="files or directories to lint")
     args = ap.parse_args(argv)

@@ -114,7 +114,7 @@ class ReplicaBalancer:
         if not candidates:
             return self._decide(None, "no-healthy-replica")
         best = max(candidates, key=lambda r: (r.cpu_free(), r.replica_id))
-        if best.cpu_free() < prog.kv_bytes:
+        if best.cpu_free() < prog.host_kv_bytes:
             return self._decide(None, "no-capacity")
         return self._decide(best.replica_id, "drain-target")
 

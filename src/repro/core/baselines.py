@@ -266,7 +266,7 @@ class TAOScheduler(TAScheduler):
     def _spill(self, rep, victim: ProgramState) -> None:
         cache = self._hicache[rep.replica_id]
         cap = rep.capacity.cpu_kv_bytes
-        size = victim.kv_bytes
+        size = victim.host_kv_bytes   # the spilled copy is in offload format
         if size > cap:
             self._emit_discard(victim.program_id, rep.replica_id, Tier.GPU)
             return

@@ -43,6 +43,12 @@ class ProgramState:
     arrived_at: float = 0.0
     steps_completed: int = 0
     finished: bool = False
+    # per-token size of the program's KV *as it crosses a link or sits in a
+    # host tier* — differs from ``kv_bytes_per_token`` (the device-resident
+    # size) when pages quantize on offload (int8 offload format). None means
+    # "same format everywhere" and falls back to the device size, so bf16
+    # deployments are byte-identical to the pre-format-layer accounting.
+    wire_bytes_per_token: int | None = None
 
     # ------------------------------------------------------------ properties
     @property
@@ -54,9 +60,35 @@ class ProgramState:
         return self.context_tokens * self.kv_bytes_per_token
 
     @property
+    def host_bytes_per_token(self) -> int:
+        """Per-token size in the offload format (what CPU/SSD copies and
+        link transfers actually carry)."""
+        return (
+            self.kv_bytes_per_token
+            if self.wire_bytes_per_token is None
+            else self.wire_bytes_per_token
+        )
+
+    @property
+    def host_kv_bytes(self) -> int:
+        """Full-context size in the offload format — what the program
+        occupies in a host tier (CPU/SSD budget accounting)."""
+        return self.context_tokens * self.host_bytes_per_token
+
+    @property
     def materialized_bytes(self) -> int:
         """Bytes of KV that physically exist somewhere (≤ ``kv_bytes``)."""
         return min(self.materialized_tokens, self.context_tokens) * self.kv_bytes_per_token
+
+    @property
+    def materialized_wire_bytes(self) -> int:
+        """Materialized KV priced at the *offload* format — the bytes a
+        transfer of this program actually puts on the wire (offload copies
+        carry the host-format payload; reloads move the same bytes back)."""
+        return (
+            min(self.materialized_tokens, self.context_tokens)
+            * self.host_bytes_per_token
+        )
 
     @property
     def has_pending(self) -> bool:

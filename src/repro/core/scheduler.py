@@ -99,9 +99,23 @@ class AgentScheduler(abc.ABC):
         self._pending_source: dict[str, Tier] = {}
 
     # -------------------------------------------------------------- events
-    def program_arrived(self, pid: str, kv_bytes_per_token: int, now: float) -> ProgramState:
-        """Register a new program (emits no actions)."""
+    def program_arrived(
+        self,
+        pid: str,
+        kv_bytes_per_token: int,
+        now: float,
+        wire_bytes_per_token: int | None = None,
+    ) -> ProgramState:
+        """Register a new program (emits no actions).
+
+        ``wire_bytes_per_token`` is the per-token size in the *offload*
+        format — what transfers and host tiers actually carry when pages
+        quantize on offload. ``None`` (the default) means the offload
+        format equals the device format and every byte figure collapses
+        to ``kv_bytes_per_token``, reproducing pre-format accounting
+        exactly."""
         prog = ProgramState(pid, kv_bytes_per_token, arrived_at=now)
+        prog.wire_bytes_per_token = wire_bytes_per_token
         prog.set_window(self.config.idleness_window)
         self.programs[pid] = prog
         self.waiting.add(prog)
@@ -295,8 +309,12 @@ class AgentScheduler(abc.ABC):
     ) -> None:
         prog.dispatched = True
         # a reload moves only the KV that was actually materialized before
-        # the offload — not the new input tokens the engine has yet to see
-        nbytes = prog.materialized_bytes if source_tier in (Tier.CPU, Tier.SSD) else 0
+        # the offload — not the new input tokens the engine has yet to see —
+        # and it moves it in the offload format (wire bytes, not device bytes)
+        nbytes = (
+            prog.materialized_wire_bytes
+            if source_tier in (Tier.CPU, Tier.SSD) else 0
+        )
         act = Forward(
             self._next_id(), prog.program_id, prog.replica,
             source_tier, recompute, nbytes,
@@ -312,10 +330,11 @@ class AgentScheduler(abc.ABC):
 
     def _emit_offload(self, prog: ProgramState, src_tier: Tier, dst_tier: Tier) -> None:
         # like reloads, offloads move only the KV that physically exists —
-        # context growth from a not-yet-prefilled input has no pages to copy
+        # context growth from a not-yet-prefilled input has no pages to copy —
+        # and the copy on the wire carries the offload format's payload
         act = Offload(
             self._next_id(), prog.program_id, prog.replica,
-            src_tier, dst_tier, prog.materialized_bytes,
+            src_tier, dst_tier, prog.materialized_wire_bytes,
         )
         if act.nbytes:
             # offloads bill the channel the bytes are *read* from: SSD-bound
@@ -333,8 +352,10 @@ class AgentScheduler(abc.ABC):
         self._staged.append(Discard(self._next_id(), pid, replica, tier))
 
     def _emit_migrate(self, prog: ProgramState, src: int, dst: int) -> None:
+        # a migrate ships the DRAM copy, which is stored in offload format
         act = Migrate(
-            self._next_id(), prog.program_id, src, dst, prog.materialized_bytes
+            self._next_id(), prog.program_id, src, dst,
+            prog.materialized_wire_bytes,
         )
         if act.nbytes:
             self.ledger.open(TransferRecord(
@@ -527,15 +548,15 @@ class MoriScheduler(AgentScheduler):
             # old tier, so re-admitting there is free (no transfer emitted)
             free = rep.cpu_free if src is Tier.CPU else rep.ssd_free
             admit = rep.cpu_admit if src is Tier.CPU else rep.ssd_admit
-            if free() >= prog.kv_bytes:
+            if free() >= prog.host_kv_bytes:
                 admit(prog)
                 self._set_label(prog, TypeLabel.IDLE)
                 return
-        if rep.cpu_free() >= prog.kv_bytes:
+        if rep.cpu_free() >= prog.host_kv_bytes:
             rep.cpu_admit(prog)
             self._emit_offload(prog, src, Tier.CPU)
             self._set_label(prog, TypeLabel.IDLE)
-        elif rep.ssd_free() >= prog.kv_bytes and self._ssd_worthwhile(prog):
+        elif rep.ssd_free() >= prog.host_kv_bytes and self._ssd_worthwhile(prog):
             rep.ssd_admit(prog)
             self._emit_offload(prog, src, Tier.SSD)
             self._set_label(prog, TypeLabel.IDLE)
@@ -561,7 +582,7 @@ class MoriScheduler(AgentScheduler):
             for victim in sinkable:
                 if rep.cpu_overflow() <= 0:
                     return
-                if rep.ssd_free() < victim.kv_bytes:
+                if rep.ssd_free() < victim.host_kv_bytes:
                     break
                 if not self._ssd_worthwhile(victim):
                     continue
@@ -586,7 +607,10 @@ class MoriScheduler(AgentScheduler):
         cfg = self.config
         if not cfg.ssd_bytes_per_s or not cfg.recompute_tok_per_s:
             return True
-        reload_s = prog.kv_bytes / cfg.ssd_bytes_per_s
+        # the NVMe read moves wire-format bytes: an int8 offload format
+        # halves reload_s, widening the band where keeping bytes beats
+        # recomputing them — format is a placement decision
+        reload_s = prog.host_kv_bytes / cfg.ssd_bytes_per_s
         recompute_s = prog.context_tokens / cfg.recompute_tok_per_s
         return reload_s < cfg.ssd_guard_factor * recompute_s
 
@@ -801,7 +825,7 @@ class MoriScheduler(AgentScheduler):
                     r for r in self.balancer.healthy()
                     if r.replica_id != rep.replica_id
                     and r.gpu_free() >= prog.kv_bytes
-                    and r.cpu_free() >= prog.kv_bytes
+                    and r.cpu_free() >= prog.host_kv_bytes
                 ]
                 if not others:
                     continue

@@ -16,7 +16,13 @@ from repro.core.types import Tier, TierCapacity
 
 @dataclass
 class ReplicaTiers:
-    """Byte-accounted GPU + CPU queues for one inference-engine replica."""
+    """Byte-accounted GPU + CPU queues for one inference-engine replica.
+
+    Tier formats: the GPU queue accounts programs at their device-resident
+    size (``kv_bytes``); the CPU and SSD queues account them at the offload
+    format's size (``host_kv_bytes``) — with an int8 offload format a host
+    tier holds roughly twice the contexts per byte of budget.
+    """
 
     replica_id: int
     capacity: TierCapacity
@@ -55,13 +61,13 @@ class ReplicaTiers:
     def cpu_admit(self, prog: ProgramState) -> None:
         assert prog.program_id not in self.cpu
         self.cpu[prog.program_id] = prog
-        self.cpu_used += prog.kv_bytes
+        self.cpu_used += prog.host_kv_bytes
         prog.tier = Tier.CPU
         prog.replica = self.replica_id
 
     def cpu_remove(self, prog: ProgramState) -> None:
         del self.cpu[prog.program_id]
-        self.cpu_used -= prog.kv_bytes
+        self.cpu_used -= prog.host_kv_bytes
 
     def cpu_overflow(self) -> int:
         return max(0, self.cpu_used - self.capacity.cpu_kv_bytes)
@@ -74,13 +80,13 @@ class ReplicaTiers:
     def ssd_admit(self, prog: ProgramState) -> None:
         assert prog.program_id not in self.ssd
         self.ssd[prog.program_id] = prog
-        self.ssd_used += prog.kv_bytes
+        self.ssd_used += prog.host_kv_bytes
         prog.tier = Tier.SSD
         prog.replica = self.replica_id
 
     def ssd_remove(self, prog: ProgramState) -> None:
         del self.ssd[prog.program_id]
-        self.ssd_used -= prog.kv_bytes
+        self.ssd_used -= prog.host_kv_bytes
 
     def ssd_overflow(self) -> int:
         return max(0, self.ssd_used - self.capacity.ssd_kv_bytes)
@@ -127,19 +133,18 @@ class ReplicaTiers:
         May push the tier into overflow; the next scheduler pass resolves it
         (paper: capacity violations *force* demotion).
         """
-        delta = new_tokens * prog.kv_bytes_per_token
         if prog.program_id in self.gpu:
-            self.gpu_used += delta
+            self.gpu_used += new_tokens * prog.kv_bytes_per_token
         elif prog.program_id in self.cpu:
-            self.cpu_used += delta
+            self.cpu_used += new_tokens * prog.host_bytes_per_token
         elif prog.program_id in self.ssd:
-            self.ssd_used += delta
+            self.ssd_used += new_tokens * prog.host_bytes_per_token
 
     def check(self) -> None:
         """Invariant check used by property tests."""
         assert self.gpu_used == sum(p.kv_bytes for p in self.gpu.values())
-        assert self.cpu_used == sum(p.kv_bytes for p in self.cpu.values())
-        assert self.ssd_used == sum(p.kv_bytes for p in self.ssd.values())
+        assert self.cpu_used == sum(p.host_kv_bytes for p in self.cpu.values())
+        assert self.ssd_used == sum(p.host_kv_bytes for p in self.ssd.values())
         assert not (set(self.gpu) & set(self.cpu))
         assert not (set(self.gpu) & set(self.ssd))
         assert not (set(self.cpu) & set(self.ssd))

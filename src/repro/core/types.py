@@ -63,7 +63,12 @@ CPU_EVICTION_ORDER = {
 class TierCapacity:
     """Byte budgets for one replica's hardware-backed tiers. ``ssd_kv_bytes``
     defaults to 0 = disabled (the paper's two-tier configuration); setting it
-    enables the §7.1 NVMe extension evaluated in benchmarks/ssd_tier.py."""
+    enables the §7.1 NVMe extension evaluated in benchmarks/ssd_tier.py.
+
+    Tier formats: the GPU budget is consumed at the device format's
+    per-token size, the CPU/SSD budgets at the offload format's
+    (``ProgramState.host_kv_bytes``) — an int8 offload format fits ~2x the
+    contexts in the same host budget without the budget itself changing."""
 
     gpu_kv_bytes: int
     cpu_kv_bytes: int
@@ -143,7 +148,11 @@ class ProgramMetrics:
 @dataclass
 class TransferCost:
     """Cost model terms for KV movement, used by sim and by the real
-    engine's transfer queue accounting."""
+    engine's transfer queue accounting.
+
+    Rates price *wire bytes* — the bytes of the format actually moved
+    (offload-format payload + scale sidecars), not the device-resident
+    size, so quantized offload shortens transfers at equal bandwidth."""
 
     pcie_bytes_per_s: float = 16e9   # effective host<->device per replica
     ssd_bytes_per_s: float = 3.5e9   # NVMe tier (paper §7.1 extension)

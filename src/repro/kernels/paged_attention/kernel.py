@@ -17,7 +17,15 @@ Layouts:
     v_pages      [N_pages, T, KH, D]
     block_tables [B, P]   int32      (P = max pages per sequence)
     lengths      [B]      int32      (valid context incl. current token)
+    k_scales     [N_pages] f32       (int8 pools only: per-page dequant scale)
+    v_scales     [N_pages] f32
     out          [B, H, D]
+
+Quantized (int8) pools: the per-page scale sidecars are *scalar-prefetched*
+alongside the block table — they live in SMEM, so the kernel reads the one
+scale its current page needs (``ks_ref[tables_ref[b, p]]``) and folds the
+dequant into the existing ``astype(F32)`` on the VMEM tile. No extra DMA,
+no dequantized copy of the pool ever exists.
 """
 from __future__ import annotations
 
@@ -32,26 +40,23 @@ F32 = jnp.float32
 
 
 def _kernel(
-    # scalar-prefetch refs
+    # scalar-prefetch refs (quantized adds ks_ref/vs_ref after lengths_ref)
     tables_ref,          # [B, P] int32
     lengths_ref,         # [B] int32
-    # inputs
-    q_ref,               # [1, H, D]
-    k_ref,               # [1, T, KH, D]   (page selected by index_map)
-    v_ref,               # [1, T, KH, D]
-    # output
-    o_ref,               # [1, H, D]
-    # scratch
-    m_scr,               # [KH, G]      f32
-    l_scr,               # [KH, G]      f32
-    acc_scr,             # [KH, G, D]   f32
-    *,
+    *rest,
     page_tokens: int,
     kv_heads: int,
     q_per_kv: int,
     softcap: float | None,
     window: int | None,
+    quantized: bool,
 ):
+    if quantized:
+        # ks_ref/vs_ref: [N] f32 per-page scales, scalar-prefetched (SMEM)
+        ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     p = pl.program_id(1)
     n_pages = pl.num_programs(1)
@@ -79,6 +84,11 @@ def _kernel(
         q = q.reshape(kv_heads, q_per_kv, D) * (D ** -0.5)
         k = k_ref[0].astype(F32)                               # [T, KH, D]
         v = v_ref[0].astype(F32)
+        if quantized:
+            # dequant folded into the f32 upcast: one SMEM scalar per page
+            page = tables_ref[b, p]
+            k = k * ks_ref[page]
+            v = v * vs_ref[page]
         s = jax.lax.dot_general(                               # [KH, G, T]
             q,
             k.transpose(1, 2, 0),                              # [KH, D, T]
@@ -122,6 +132,8 @@ def paged_attention(
     v_pages: jax.Array,      # [N, T, KH, D]
     block_tables: jax.Array, # [B, P] int32
     lengths: jax.Array,      # [B] int32
+    k_scales: jax.Array | None = None,   # [N] f32 (int8 pools only)
+    v_scales: jax.Array | None = None,
     *,
     softcap: float | None = None,
     window: int | None = None,
@@ -131,15 +143,22 @@ def paged_attention(
     N, T, KH, _ = k_pages.shape
     P = block_tables.shape[1]
     G = H // KH
+    quantized = k_scales is not None
+    # index_maps take (b, p, *prefetch_refs); the block table is always the
+    # first prefetch ref, so one lambda arity covers both operand sets
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(B, P),
         in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, p, tbl, lens: (b, 0, 0)),
-            pl.BlockSpec((1, T, KH, D), lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
-            pl.BlockSpec((1, T, KH, D), lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, H, D), lambda b, p, *refs: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, T, KH, D), lambda b, p, *refs: (refs[0][b, p], 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, T, KH, D), lambda b, p, *refs: (refs[0][b, p], 0, 0, 0)
+            ),
         ],
-        out_specs=pl.BlockSpec((1, H, D), lambda b, p, tbl, lens: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, *refs: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((KH, G), F32),
             pltpu.VMEM((KH, G), F32),
@@ -153,10 +172,18 @@ def paged_attention(
         q_per_kv=G,
         softcap=softcap,
         window=window,
+        quantized=quantized,
     )
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, q, k_pages, v_pages)
+    )
+    if quantized:
+        return call(
+            block_tables, lengths,
+            k_scales.astype(F32), v_scales.astype(F32),
+            q, k_pages, v_pages,
+        )
+    return call(block_tables, lengths, q, k_pages, v_pages)

@@ -4,6 +4,12 @@
 kernel in interpret mode instead of the jnp oracle — CI's kernel-parity job
 uses it so the TPU branch of this dispatch is never dead code on a CPU
 runner. The env var is read at call time so tests can flip it per-case.
+
+Both entry points accept optional ``k_scales``/``v_scales`` per-page fp32
+sidecars (``[N]``): pass them when the pool is int8-resident and every
+backend dequantizes in its gather (the kernel via scalar-prefetched SMEM
+scales, the oracle in its dense gather). ``None`` means bf16 pages — the
+pre-quantization paths, bit-identical to before the format layer existed.
 """
 from __future__ import annotations
 
@@ -11,6 +17,7 @@ import os
 
 import jax
 
+from repro.kernels import kv_quant
 from repro.kernels.paged_attention.kernel import paged_attention as _pallas
 from repro.kernels.paged_attention.ref import (
     paged_attention_decode_ref as _decode_ref,
@@ -23,30 +30,31 @@ def _interpret_forced() -> bool:
 
 
 def paged_attention(
-    q, k_pages, v_pages, block_tables, lengths, *, softcap=None, window=None
+    q, k_pages, v_pages, block_tables, lengths,
+    k_scales=None, v_scales=None, *, softcap=None, window=None,
 ):
     """Decode attention over a paged KV pool (see kernel.py for layouts)."""
     if jax.default_backend() == "tpu":
         return _pallas(
-            q, k_pages, v_pages, block_tables, lengths,
+            q, k_pages, v_pages, block_tables, lengths, k_scales, v_scales,
             softcap=softcap, window=window,
         )
     if _interpret_forced():
         return _pallas(
-            q, k_pages, v_pages, block_tables, lengths,
+            q, k_pages, v_pages, block_tables, lengths, k_scales, v_scales,
             softcap=softcap, window=window, interpret=True,
         )
     # CPU/GPU: interpret the kernel for tiny shapes is too slow in prod paths;
     # use the jnp oracle (identical semantics, validated in tests).
     return _ref(
-        q, k_pages, v_pages, block_tables, lengths,
+        q, k_pages, v_pages, block_tables, lengths, k_scales, v_scales,
         softcap=softcap, window=window,
     )
 
 
 def paged_attention_decode(
     q, k_new, v_new, k_pages, v_pages, block_tables, lengths, tail_pages,
-    tail_offsets, *, softcap=None, window=None,
+    tail_offsets, k_scales=None, v_scales=None, *, softcap=None, window=None,
 ):
     """Decode attention for a token whose KV is not yet in the pool.
 
@@ -61,12 +69,31 @@ def paged_attention_decode(
     for the post-scan commit, so the TPU branch still pays one layer-slice
     copy per layer; folding k_new/v_new into the kernel as operands (the
     oracle's trick, done in VMEM) is the follow-up that removes it.
+
+    On an int8 pool the pre-kernel scatter becomes a *requantize-insert*
+    of the tail pages (their scale may grow to admit the new token), so
+    the kernel sees a self-consistent quantized pool; the oracle inserts
+    into its dequantized gather at full precision instead. The divergence
+    is one token's quantization error — inside the parity band.
     """
     def _scatter_then_kernel(interpret: bool):
-        kp = k_pages.at[tail_pages, tail_offsets].set(k_new.astype(k_pages.dtype))
-        vp = v_pages.at[tail_pages, tail_offsets].set(v_new.astype(v_pages.dtype))
+        if k_scales is not None:
+            kp, ks = kv_quant.requantize_insert(
+                k_pages, k_scales, tail_pages, tail_offsets, k_new
+            )
+            vp, vs = kv_quant.requantize_insert(
+                v_pages, v_scales, tail_pages, tail_offsets, v_new
+            )
+        else:
+            kp = k_pages.at[tail_pages, tail_offsets].set(
+                k_new.astype(k_pages.dtype)
+            )
+            vp = v_pages.at[tail_pages, tail_offsets].set(
+                v_new.astype(v_pages.dtype)
+            )
+            ks = vs = None
         return _pallas(
-            q, kp, vp, block_tables, lengths,
+            q, kp, vp, block_tables, lengths, ks, vs,
             softcap=softcap, window=window, interpret=interpret,
         )
 
@@ -76,7 +103,7 @@ def paged_attention_decode(
         return _scatter_then_kernel(True)
     return _decode_ref(
         q, k_new, v_new, k_pages, v_pages, block_tables, lengths,
-        softcap=softcap, window=window,
+        k_scales, v_scales, softcap=softcap, window=window,
     )
 
 

@@ -10,7 +10,10 @@ Semantics (shared with the Pallas kernel, validated in tests):
   :func:`repro.models.layers.decode_attention`;
 * ragged ``lengths`` — positions at or past a sequence's length are
   masked, so partially-filled tail pages and garbage pages beyond the
-  block table's live span never leak into the output.
+  block table's live span never leak into the output;
+* ``k_scales``/``v_scales`` — int8 pools: pages are dequantized *in the
+  gather* (``q_page.astype(f32) * scale[page]``), exactly what the Pallas
+  kernel does per VMEM tile, so oracle and kernel see identical operands.
 """
 from __future__ import annotations
 
@@ -20,21 +23,29 @@ import jax.numpy as jnp
 F32 = jnp.float32
 
 
-def paged_attention_ref(
-    q, k_pages, v_pages, block_tables, lengths, *, softcap=None, window=None
-):
-    B = q.shape[0]
+def _gather_pages(k_pages, v_pages, block_tables, k_scales, v_scales):
+    """Dense gather -> ``[B, P*T, KH, D]``, dequantizing int8 pools."""
+    B, P = block_tables.shape
     T, KH, D = k_pages.shape[1:]
-    P = block_tables.shape[1]
-    # dense gather: [B, P*T, KH, D]
-    k = k_pages[block_tables].reshape(B, P * T, KH, D)
-    v = v_pages[block_tables].reshape(B, P * T, KH, D)
+    k = k_pages[block_tables]                       # [B, P, T, KH, D]
+    v = v_pages[block_tables]
+    if k_scales is not None:
+        k = k.astype(F32) * k_scales[block_tables][..., None, None, None]
+        v = v.astype(F32) * v_scales[block_tables][..., None, None, None]
+    return k.reshape(B, P * T, KH, D), v.reshape(B, P * T, KH, D)
+
+
+def paged_attention_ref(
+    q, k_pages, v_pages, block_tables, lengths,
+    k_scales=None, v_scales=None, *, softcap=None, window=None,
+):
+    k, v = _gather_pages(k_pages, v_pages, block_tables, k_scales, v_scales)
     return _gathered_attention(q, k, v, lengths, softcap, window)
 
 
 def paged_attention_decode_ref(
     q, k_new, v_new, k_pages, v_pages, block_tables, lengths,
-    *, softcap=None, window=None,
+    k_scales=None, v_scales=None, *, softcap=None, window=None,
 ):
     """Decode-step oracle where the current token's KV (``k_new``/``v_new``
     ``[B, KH, D]``, global position ``lengths - 1``) has *not* been written
@@ -45,12 +56,15 @@ def paged_attention_decode_ref(
     gather, not the ``[N, T]`` pool, so a layer scan over this op never
     copies the pool. The engine appends all layers' KV to the tail pages
     in one batched scatter after the scan.
+
+    On an int8 pool the insert lands in the dequantized f32 gather, i.e.
+    the new token is attended at full precision; the kernel path instead
+    requantizes the tail page before the gather, which adds one page's
+    quantization error on the freshly appended token (inside the
+    documented parity band, pinned in tests/test_kv_quant.py).
     """
     B = q.shape[0]
-    T, KH, D = k_pages.shape[1:]
-    P = block_tables.shape[1]
-    k = k_pages[block_tables].reshape(B, P * T, KH, D)
-    v = v_pages[block_tables].reshape(B, P * T, KH, D)
+    k, v = _gather_pages(k_pages, v_pages, block_tables, k_scales, v_scales)
     idx = jnp.arange(B), lengths - 1
     k = k.at[idx].set(k_new.astype(k.dtype))
     v = v.at[idx].set(v_new.astype(v.dtype))

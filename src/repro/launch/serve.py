@@ -54,8 +54,8 @@ def main() -> None:
     router = MoriRouter(
         engines,
         scheduler=args.scheduler,
-        gpu_capacity_bytes=engines[0].pool.page_bytes * args.gpu_pages,
-        cpu_capacity_bytes=engines[0].pool.page_bytes * args.cpu_pages,
+        gpu_capacity_bytes=engines[0].pool.page_bytes * args.gpu_pages,  # lint: kv008-ok (GPU budget at device format)
+        cpu_capacity_bytes=engines[0].pool.host_page_bytes * args.cpu_pages,
         config=SchedulerConfig(tick_interval_s=1.0),
         serial_decode=args.serial_decode,
     )

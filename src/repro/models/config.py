@@ -82,7 +82,7 @@ class ModelConfig:
         if self.family == "hybrid":
             n_shared = self.num_layers // max(1, self.shared_attn_period)
             return n_shared * 2 * self.num_kv_heads * self.hybrid_head_dim * b
-        return self.num_layers * 2 * self.num_kv_heads * self.head_dim * b
+        return self.num_layers * 2 * self.num_kv_heads * self.head_dim * b  # lint: kv008-ok (b parameterizes the element size; the 2 is K/V planes)
 
     @property
     def hybrid_head_dim(self) -> int:

@@ -450,7 +450,8 @@ def _write_slot(cache, new, idx):
 
 def apply_dense_block_paged(
     p, x, cfg: ModelConfig, *, k_pages, v_pages, block_tables, tail_pages,
-    tail_offsets, lengths, window=None, ctx=NULL_CTX,
+    tail_offsets, lengths, k_scales=None, v_scales=None, window=None,
+    ctx=NULL_CTX,
 ):
     """Decode mode of :func:`apply_dense_block` over a *paged* KV pool.
 
@@ -464,6 +465,8 @@ def apply_dense_block_paged(
     dispatch itself; it is *returned*, not written — the caller commits
     every layer's append to the pool in one batched scatter after the
     layer scan, so scanning this block never copies the pool per layer.
+    On an int8-resident pool ``k_scales``/``v_scales`` carry this layer's
+    per-page dequant sidecar (``[N]``), threaded to the kernel dispatch.
     Returns ``(x', (k_new, v_new), aux)`` with k_new/v_new ``[B, KH, HD]``.
     """
     h_, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -475,7 +478,8 @@ def apply_dense_block_paged(
     )
     attn = paged_attention_decode(
         q[:, 0], k[:, 0], v[:, 0], k_pages, v_pages, block_tables, lengths,
-        tail_pages, tail_offsets, softcap=cfg.attn_logit_softcap, window=window,
+        tail_pages, tail_offsets, k_scales, v_scales,
+        softcap=cfg.attn_logit_softcap, window=window,
     )                                                      # [B, H, D]
     x = x + (attn.reshape(B, 1, h_ * hd) @ p["attn"]["wo"])
     f_in = rmsnorm(x, p["ln2"])

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kv_quant
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     NULL_CTX,
@@ -435,7 +436,7 @@ class Model:
     # ------------------------------------------------------- paged decode
     def decode_paged(
         self, params, k_pages, v_pages, tokens, lengths, block_tables,
-        tail_pages, tail_offsets, ctx=NULL_CTX,
+        tail_pages, tail_offsets, k_scales=None, v_scales=None, ctx=NULL_CTX,
     ):
         """One block-table decode step (dense-cache families only).
 
@@ -450,37 +451,63 @@ class Model:
         never copies the pool (the old per-layer write forced L full-pool
         copies through the scan). Layers scan exactly like :meth:`decode`
         so compile stays O(1) in depth.
-        Returns ``(logits [B, V], k_pages', v_pages')``.
+
+        On an int8-resident pool, pass the per-(layer, page) scale
+        sidecars ``k_scales``/``v_scales`` ``[L, N]``: each layer's slice
+        rides the scan for the kernel's dequant, and the commit becomes a
+        requantize-insert of the tail pages (their scales may grow to
+        admit the new token).
+        Returns ``(logits [B, V], k_pages', v_pages')`` — plus
+        ``(k_scales', v_scales')`` when sidecars were passed.
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "moe", "vlm") and (
             not cfg.local_global_alternating
         ), "paged decode serves the dense-cache families"
+        quantized = k_scales is not None
         x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # [B,1,d]
 
         def body(h, xs):
-            p, kp, vp = xs
+            if quantized:
+                p, kp, vp, ks, vs = xs
+            else:
+                p, kp, vp = xs
+                ks = vs = None
             h, (k_new, v_new), _ = apply_dense_block_paged(
                 p, h, cfg, k_pages=kp, v_pages=vp, block_tables=block_tables,
                 tail_pages=tail_pages, tail_offsets=tail_offsets,
-                lengths=lengths, window=cfg.sliding_window, ctx=ctx,
+                lengths=lengths, k_scales=ks, v_scales=vs,
+                window=cfg.sliding_window, ctx=ctx,
             )
             return h, (k_new, v_new)
 
-        x, (k_news, v_news) = jax.lax.scan(
-            body, x, (params["blocks"], k_pages, v_pages)
+        xs = (
+            (params["blocks"], k_pages, v_pages, k_scales, v_scales)
+            if quantized
+            else (params["blocks"], k_pages, v_pages)
         )
+        x, (k_news, v_news) = jax.lax.scan(body, x, xs)
         # commit all layers' appends at once: k_news/v_news [L, B, KH, HD]
         # land at [:, tail_pages[b], tail_offsets[b]] (unique per row)
-        k_pages = k_pages.at[:, tail_pages, tail_offsets].set(
-            k_news.astype(k_pages.dtype)
-        )
-        v_pages = v_pages.at[:, tail_pages, tail_offsets].set(
-            v_news.astype(v_pages.dtype)
-        )
+        if quantized:
+            k_pages, k_scales = kv_quant.requantize_insert_run(
+                k_pages, k_scales, tail_pages, tail_offsets, k_news
+            )
+            v_pages, v_scales = kv_quant.requantize_insert_run(
+                v_pages, v_scales, tail_pages, tail_offsets, v_news
+            )
+        else:
+            k_pages = k_pages.at[:, tail_pages, tail_offsets].set(
+                k_news.astype(k_pages.dtype)
+            )
+            v_pages = v_pages.at[:, tail_pages, tail_offsets].set(
+                v_news.astype(v_pages.dtype)
+            )
         h = rmsnorm(x[:, 0, :], params["ln_f"])
         logits = softcap((h @ params["head"]).astype(F32), cfg.final_logit_softcap)
         logits = ctx.constrain(logits, ("batch", "vocab_act"))
+        if quantized:
+            return logits, k_pages, v_pages, k_scales, v_scales
         return logits, k_pages, v_pages
 
     # ------------------------------------------------------------ prefill

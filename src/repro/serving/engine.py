@@ -121,6 +121,23 @@ class WarmupSpec:
     probe_group: str = ""
 
 
+def greedy_token(logits):
+    """Deterministic greedy sampling shared by every sample site (dense
+    decode, paged decode, monolithic and chunked prefill).
+
+    The KV cache is bf16 while logits are f32, so two token-identical
+    paths that materialize the context differently (dense slots vs paged
+    gather, bf16 vs int8 pages) can produce logits differing by ~1 bf16
+    ulp — enough to flip an f32 argmax between two near-tied candidates.
+    Rounding the logits to bf16 first collapses those sub-ulp differences
+    into *exact* ties, and ``jnp.argmax`` breaks exact ties by lowest
+    index on every backend — so the sampled token is a deterministic
+    function of the context, not of which code path computed it."""
+    return jnp.argmax(
+        logits.astype(jnp.bfloat16).astype(jnp.float32), axis=-1
+    )
+
+
 def _chunk_prefill_impl(model, ctx, params, k_pages, v_pages, prefix_idx,
                         write_idx, tokens, prefix_valid, pos0, take,
                         logit_idx, page_tokens):
@@ -153,14 +170,48 @@ def _chunk_prefill_impl(model, ctx, params, k_pages, v_pages, prefix_idx,
     return logits[0], k_pages, v_pages
 
 
+def _chunk_prefill_impl_q(model, ctx, params, k_pages, v_pages, k_scale,
+                          v_scale, prefix_idx, write_idx, tokens,
+                          prefix_valid, pos0, take, logit_idx, page_tokens):
+    """Int8-resident twin of :func:`_chunk_prefill_impl`: the prefix gather
+    dequantizes through the scale sidecars and the chunk scatter quantizes
+    each written page (payload + sidecar updated together, all donated)."""
+    from repro.serving.kvpool import gather_token_run_q, scatter_token_run_q
+
+    prefix = None
+    if prefix_idx.shape[0]:  # lint: jit-shape-branch-ok
+        pk, pv = gather_token_run_q(
+            k_pages, k_scale, v_pages, v_scale, prefix_idx, jnp.bfloat16
+        )
+        prefix = {"k": pk[:, None], "v": pv[:, None]}           # [L,1,Sp,KH,HD]
+    logits, cache = model.prefill(
+        params, {"tokens": tokens}, ctx=ctx, prefix=prefix,
+        logit_index=logit_idx, positions_offset=pos0,
+        prefix_valid=prefix_valid if prefix is not None else None,
+    )
+    k_c = cache["k"][:, 0]                                     # [L,C_pad,KH,HD]
+    v_c = cache["v"][:, 0]
+    keep = (jnp.arange(k_c.shape[1]) < take)[None, :, None, None]
+    k_c = jnp.where(keep, k_c, 0)
+    v_c = jnp.where(keep, v_c, 0)
+    k_pages, k_scale, v_pages, v_scale = scatter_token_run_q(
+        k_pages, k_scale, v_pages, v_scale, write_idx, k_c, v_c, page_tokens
+    )
+    return logits[0], k_pages, v_pages, k_scale, v_scale
+
+
 @functools.lru_cache(maxsize=None)
-def _chunk_prefill_fn(cfg: ModelConfig):
+def _chunk_prefill_fn(cfg: ModelConfig, quantized: bool = False):
     """Process-global jitted chunk prefill, keyed on the (hashable) model
-    config. Sharing the jit cache across Engine instances is the point:
-    chunk shapes are bucketed, so every engine in the process reuses the
-    same few compiles instead of paying a fresh trace per submit the way
-    monolithic variable-shape prefill does."""
+    config and the pool's device format. Sharing the jit cache across
+    Engine instances is the point: chunk shapes are bucketed, so every
+    engine in the process reuses the same few compiles instead of paying a
+    fresh trace per submit the way monolithic variable-shape prefill
+    does."""
     model = Model(cfg)
+    if quantized:
+        fn = functools.partial(_chunk_prefill_impl_q, model, NULL_CTX)
+        return jax.jit(fn, donate_argnums=(1, 2, 3, 4), static_argnums=(12,))
     fn = functools.partial(_chunk_prefill_impl, model, NULL_CTX)
     return jax.jit(fn, donate_argnums=(1, 2), static_argnums=(10,))
 
@@ -206,9 +257,15 @@ class Engine:
         table_bucket_pages: int = 4,
         prefill_bucket_tokens: int = 32,
         prefill_chunk_tokens: int = 64,
+        offload_format: str = "bf16",
+        device_format: str = "bf16",
     ):
         assert cfg.family in ("dense", "moe", "vlm") and not cfg.local_global_alternating, (
             "the real engine serves dense-cache families; see DESIGN.md"
+        )
+        assert not (dense_slots and device_format == "int8"), (
+            "device_format='int8' packs the paged pool; the dense-slot "
+            "compatibility path has no page-granular scale sidecars"
         )
         self.cfg = cfg
         self.model = Model(cfg)
@@ -254,7 +311,10 @@ class Engine:
             page_tokens=page_tokens,
             n_device_pages=n_device_pages + self.decode_reserve_pages,
             n_host_pages=n_host_pages,
+            offload_format=offload_format,
+            device_format=device_format,
         )
+        self.quantized = self.pool.quantized_device
         self.tree = TypedRadixTree(page_tokens)
         if self.pool._san is not None:
             # give the sanitizer the node graph (pin checks) and the live
@@ -280,13 +340,25 @@ class Engine:
                 self.pool.alloc_device() for _ in range(max_slots)
             ]
             self._table_bucket = table_bucket_pages
-            self._paged_decode_fn = jax.jit(
-                self._paged_decode_impl, donate_argnums=(1, 2)
-            )
+            if self.quantized:
+                # the step rewrites tail-page scales alongside the payload,
+                # so the sidecars are donated (and re-adopted) too
+                self._paged_decode_fn = jax.jit(
+                    self._paged_decode_impl_q, donate_argnums=(1, 2, 3, 4)
+                )
+            else:
+                self._paged_decode_fn = jax.jit(
+                    self._paged_decode_impl, donate_argnums=(1, 2)
+                )
             # chunked prefill: the process-global callable shares compiles
             # across engines; placement engines need their own ShardCtx
             if placement is None:
-                self._chunk_fn = _chunk_prefill_fn(cfg)
+                self._chunk_fn = _chunk_prefill_fn(cfg, self.quantized)
+            elif self.quantized:
+                self._chunk_fn = jax.jit(
+                    functools.partial(_chunk_prefill_impl_q, self.model, self.ctx),
+                    donate_argnums=(1, 2, 3, 4), static_argnums=(12,),
+                )
             else:
                 self._chunk_fn = jax.jit(
                     functools.partial(_chunk_prefill_impl, self.model, self.ctx),
@@ -377,12 +449,18 @@ class Engine:
         n_buckets = -(-self.pages_per_slot // self._table_bucket)
         specs: list[WarmupSpec] = []
 
+        quantized = self.quantized
+        decode_donate = (1, 2, 3, 4) if quantized else (1, 2)
+
         def decode_args(p_pad: int):
             def make():
                 tables = np.repeat(scratch[:, None], p_pad, axis=1)
                 k_pages, v_pages = self.pool.block_table_view()
+                sidecars = ()
+                if quantized:
+                    sidecars = self.pool.scale_view()
                 return (
-                    self.params, k_pages, v_pages,
+                    self.params, k_pages, v_pages, *sidecars,
                     jnp.zeros(self.max_slots, jnp.int32),
                     jnp.ones(self.max_slots, jnp.int32),
                     jnp.asarray(tables), jnp.asarray(scratch),
@@ -396,7 +474,7 @@ class Engine:
             specs.append(WarmupSpec(
                 name=f"paged_decode_fn[pages={p_pad}]", kind="paged_decode",
                 fn_name="_paged_decode_fn", make_args=decode_args(p_pad),
-                donate_argnums=(1, 2), bucket={"table_pages": p_pad},
+                donate_argnums=decode_donate, bucket={"table_pages": p_pad},
                 probe_group=f"engine{self._audit_id}/paged_decode",
             ))
         if not prefill_chunks:
@@ -406,12 +484,18 @@ class Engine:
         cap_pad = -(-cap // self.prefill_bucket) * self.prefill_bucket
         sp = int(scratch[0])
 
+        chunk_donate = (1, 2, 3, 4) if quantized else (1, 2)
+        chunk_static = (12,) if quantized else (10,)
+
         def chunk_args(p_pad: int, c_pad: int):
             def make():
                 w_pad = -(-c_pad // T)
                 k_pages, v_pages = self.pool.block_table_view()
+                sidecars = ()
+                if quantized:
+                    sidecars = self.pool.scale_view()
                 return (
-                    self.params, k_pages, v_pages,
+                    self.params, k_pages, v_pages, *sidecars,
                     jnp.asarray([sp] * p_pad, jnp.int32),
                     jnp.asarray([sp] * w_pad, jnp.int32),
                     jnp.zeros((1, c_pad), jnp.int32),
@@ -434,7 +518,7 @@ class Engine:
                          f"chunk={c_pad}]",
                     kind="chunk_prefill", fn_name="_chunk_fn",
                     make_args=chunk_args(p_pad, c_pad),
-                    donate_argnums=(1, 2), static_argnums=(10,),
+                    donate_argnums=chunk_donate, static_argnums=chunk_static,
                     bucket={"prefix_pages": p_pad, "chunk_tokens": c_pad},
                     probe_group=(
                         f"engine{self._audit_id}/chunk_prefill/{group}"
@@ -467,6 +551,8 @@ class Engine:
             out = getattr(self, spec.fn_name)(*spec.make_args())
             if spec.kind == "dense":
                 _, self.slot_k, self.slot_v = out
+            elif self.quantized:
+                self.pool.adopt(out[1], out[2], out[3], out[4])
             else:
                 self.pool.adopt(out[1], out[2])
         if compile_tracker.enabled():
@@ -510,7 +596,7 @@ class Engine:
             self.params, batch, ctx=self.ctx, prefix=prefix,
             logit_index=len(suffix) - 1,
         )
-        first_token = int(jnp.argmax(logits[0]))
+        first_token = int(greedy_token(logits[0]))
 
         # 3. install into a decode slot
         sid = self._free_slots.pop()
@@ -659,8 +745,9 @@ class Engine:
         tokens = jnp.asarray([chunk + [0] * (c_pad - take)], jnp.int32)
         pos0 = job.cached_tokens + job.cursor    # absolute chunk start
         k_pages, v_pages = self.pool.block_table_view()
-        logits, new_k, new_v = self._chunk_fn(
-            self.params, k_pages, v_pages,
+        sidecars = self.pool.scale_view() if self.quantized else ()
+        out = self._chunk_fn(
+            self.params, k_pages, v_pages, *sidecars,
             jnp.asarray(prefix_idx, jnp.int32),
             jnp.asarray(write_idx, jnp.int32),
             tokens,
@@ -670,12 +757,13 @@ class Engine:
             jnp.int32(take - 1),                 # final-chunk logit position
             T,
         )
-        self.pool.adopt(new_k, new_v)
+        logits = out[0]
+        self.pool.adopt(*out[1:])
         job.cursor += take
         job.chunks_run += 1
         if job.cursor < len(job.suffix):
             return False
-        job.first_token = int(jnp.argmax(logits))
+        job.first_token = int(greedy_token(logits))
         self._install_job(job)
         return True
 
@@ -776,7 +864,7 @@ class Engine:
         logits, new_cache = self.model.decode(
             params, cache, tokens, lengths, ctx=self.ctx
         )
-        return jnp.argmax(logits, axis=-1), new_cache["k"], new_cache["v"]
+        return greedy_token(logits), new_cache["k"], new_cache["v"]
 
     def _paged_decode_impl(
         self, params, k_pages, v_pages, tokens, lengths, tables,
@@ -786,7 +874,19 @@ class Engine:
             params, k_pages, v_pages, tokens, lengths, tables,
             tail_pages, tail_offsets, ctx=self.ctx,
         )
-        return jnp.argmax(logits, axis=-1), k_pages, v_pages
+        return greedy_token(logits), k_pages, v_pages
+
+    def _paged_decode_impl_q(
+        self, params, k_pages, v_pages, k_scale, v_scale, tokens, lengths,
+        tables, tail_pages, tail_offsets,
+    ):
+        """Int8-resident decode step: scale sidecars ride in and out (the
+        tail-page requantize may grow them)."""
+        logits, k_pages, v_pages, k_scale, v_scale = self.model.decode_paged(
+            params, k_pages, v_pages, tokens, lengths, tables,
+            tail_pages, tail_offsets, k_scale, v_scale, ctx=self.ctx,
+        )
+        return greedy_token(logits), k_pages, v_pages, k_scale, v_scale
 
     def step(self, active: "list[int] | None" = None) -> list[Completion]:
         """One continuous-batching decode step across the active slots.
@@ -901,13 +1001,14 @@ class Engine:
                 tail_pages[sid] = slot.table[pos // T]
                 tail_offsets[sid] = pos % T
         k_pages, v_pages = self.pool.block_table_view()
-        next_tok, new_k, new_v = self._paged_decode_fn(
-            self.params, k_pages, v_pages, toks, lens,
+        sidecars = self.pool.scale_view() if self.quantized else ()
+        out = self._paged_decode_fn(
+            self.params, k_pages, v_pages, *sidecars, toks, lens,
             jnp.asarray(tables), jnp.asarray(tail_pages),
             jnp.asarray(tail_offsets),
         )
-        self.pool.adopt(new_k, new_v)
-        return next_tok
+        self.pool.adopt(*out[1:])
+        return out[0]
 
     def _finish(self, slot: _Slot) -> Completion:
         """Persist the slot's full pages into the radix tree, free the slot.

@@ -111,6 +111,7 @@ from repro.core.actions import (
     SetLabel,
 )
 from repro.core.transfers import CopyJob, copy_request_for
+from repro.kernels import kv_quant
 from repro.core.types import ProgramTrace, Tier, TransferCost
 from repro.serving.engine import Completion, Engine, EngineRequest
 from repro.serving.transfer_plane import ReplicaTransferPlane, _MigrateStream
@@ -131,6 +132,10 @@ class RouterMetrics:
     offloaded_pages: int = 0
     reloaded_pages: int = 0          # PCIe-billed (CPU-tier) reloads
     nvme_reloaded_pages: int = 0     # NVMe-billed (SSD-tier) reloads
+    # wire bytes actually moved, priced at the offload format (int8 pages
+    # bill their int8 payload + scale sidecars, not the bf16 device size)
+    offload_bytes: int = 0
+    reload_bytes: int = 0
     recompute_submits: int = 0
     gated_events: int = 0
     # async transfer plane (zero in sync_transfers mode)
@@ -256,10 +261,23 @@ class MoriRouter:
     ):
         self.engines = engines
         cfg0 = engines[0].cfg
-        self.kv_bytes_per_token = (
-            cfg0.num_layers * 2 * cfg0.num_kv_heads * cfg0.head_dim * 2
-        )
         pool = engines[0].pool
+        # per-token sizes come from the pool's tier formats: the device
+        # size prices GPU budgets, the wire size prices transfers and host
+        # tiers (kv_quant.token_wire_bytes is the format-aware sizing
+        # helper; see docs/architecture.md "tier formats")
+        self.kv_bytes_per_token = kv_quant.token_wire_bytes(
+            cfg0.num_layers, cfg0.num_kv_heads, cfg0.head_dim,
+            getattr(pool, "device_format", "bf16"),
+        )
+        wire_bpt = kv_quant.token_wire_bytes(
+            cfg0.num_layers, cfg0.num_kv_heads, cfg0.head_dim,
+            getattr(pool, "offload_format", "bf16"),
+        )
+        # None = same format everywhere -> byte-identical legacy accounting
+        self.wire_bytes_per_token = (
+            None if wire_bpt == self.kv_bytes_per_token else wire_bpt
+        )
         # default GPU budget = the pool's *cache* capacity: the block-table
         # engine provisions extra pages as decode state (the HBM its dense
         # slot buffers used to occupy) and the scheduler must not place
@@ -273,7 +291,9 @@ class MoriRouter:
         cpu_cap = (
             cpu_capacity_bytes
             if cpu_capacity_bytes is not None
-            else pool.n_host_pages * pool.page_bytes
+            else pool.n_host_pages * getattr(  # lint: kv008-ok (page_bytes is only the stub-pool fallback)
+                pool, "host_page_bytes", pool.page_bytes
+            )
         )
         config = config or SchedulerConfig(tick_interval_s=5.0)
         # cross-replica migration (pressure-driven or drain-driven) copies
@@ -505,11 +525,13 @@ class MoriRouter:
                 # last page lands (_plane_committed)
                 self.planes[act.replica].enqueue(act, now)
                 return
-            pages = self.engines[act.replica].reload_program(act.pid)
+            eng = self.engines[act.replica]
+            pages = eng.reload_program(act.pid)
             if act.source_tier is Tier.SSD:
                 self.metrics.nvme_reloaded_pages += pages
             else:
                 self.metrics.reloaded_pages += pages
+            self.metrics.reload_bytes += pages * eng.pool.host_page_bytes
             self._ack(act.pid, act.action_id, now)
         elif act.recompute:
             # Waiting-tier re-admission: drop any pages that survived
@@ -526,9 +548,10 @@ class MoriRouter:
         if self._async and act.nbytes > 0:
             self.planes[act.replica].enqueue(act, now)
             return
-        self.metrics.offloaded_pages += self.engines[act.replica].offload_program(
-            act.pid
-        )
+        eng = self.engines[act.replica]
+        pages = eng.offload_program(act.pid)
+        self.metrics.offloaded_pages += pages
+        self.metrics.offload_bytes += pages * eng.pool.host_page_bytes
         self._ack(act.pid, act.action_id, now)
 
     def _exec_migrate(self, act: Migrate, now: float) -> None:
@@ -564,8 +587,12 @@ class MoriRouter:
     ) -> None:
         """Async transfer fully landed: bill it, release any gated forward,
         and acknowledge the scheduler's ledger record."""
+        page_wire = (
+            self.engines[job.payload.creq.exec_replica].pool.host_page_bytes
+        )
         if kind == "offload":
             self.metrics.offloaded_pages += pages
+            self.metrics.offload_bytes += pages * page_wire
         elif kind == "migrate":
             self.metrics.migrated_pages += pages
         else:
@@ -574,6 +601,7 @@ class MoriRouter:
                 self.metrics.nvme_reloaded_pages += pages
             else:
                 self.metrics.reloaded_pages += pages
+            self.metrics.reload_bytes += pages * page_wire
             self._dispatched[act.pid] = act
             self._dispatch_time[act.pid] = now
         self._ack(job.pid, job.action_id, now)
@@ -716,7 +744,10 @@ class MoriRouter:
                 # and testable (output_log equality vs an undisturbed run)
                 "rng": random.Random(f"{seed}:{pid}"),
             }
-            self.sched.program_arrived(pid, self.kv_bytes_per_token, 0.0)
+            self.sched.program_arrived(
+                pid, self.kv_bytes_per_token, 0.0,
+                wire_bytes_per_token=self.wire_bytes_per_token,
+            )
             push(0.0, lambda t, p=pid: self._issue(p, 0, t))
 
         for f in faults or []:

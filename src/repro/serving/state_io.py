@@ -26,8 +26,12 @@ from pathlib import Path
 from repro.core.types import Tier, TypeLabel
 
 #: v2 adds the per-replica section (tier byte usage + live decode-slot
-#: occupancy); v1 snapshots (program table only) still restore.
-FORMAT_VERSION = 2
+#: occupancy); v3 adds tier formats (per-replica pool device/offload
+#: formats and per-program wire_bytes_per_token) so restored placement
+#: decisions keep pricing transfers at the format actually moved. v1/v2
+#: snapshots (no format fields) still restore — absent fields mean bf16
+#: everywhere, which is exactly what those versions could express.
+FORMAT_VERSION = 3
 
 
 def control_plane_state(router) -> dict:
@@ -38,11 +42,16 @@ def control_plane_state(router) -> dict:
     for rep in sched.replicas:
         r = rep.replica_id
         pump = router._pump_slots[r] if r < len(router._pump_slots) else {}
+        pool = getattr(router.engines[r], "pool", None) if r < len(
+            router.engines
+        ) else None
         replicas.append(
             {
                 "gpu_used": rep.gpu_used,
                 "cpu_used": rep.cpu_used,
                 "ssd_used": rep.ssd_used,
+                "device_format": getattr(pool, "device_format", "bf16"),
+                "offload_format": getattr(pool, "offload_format", "bf16"),
                 "slots": [
                     {
                         "pid": s.pid,
@@ -64,6 +73,7 @@ def control_plane_state(router) -> dict:
                 "replica": p.replica,
                 "context_tokens": p.context_tokens,
                 "kv_bytes_per_token": p.kv_bytes_per_token,
+                "wire_bytes_per_token": p.wire_bytes_per_token,
                 "label": p.label.value,
                 "steps_completed": p.steps_completed,
                 "finished": p.finished,
@@ -135,7 +145,7 @@ def restore_snapshot(router, path: str | os.PathLike) -> dict:
     Returns counters {"restored": n, "requeued": m, "was_resident": k}.
     """
     snap = json.loads(Path(path).read_text())
-    assert snap["version"] in (1, FORMAT_VERSION), snap["version"]
+    assert snap["version"] in (1, 2, FORMAT_VERSION), snap["version"]
     sched = router.sched
     resident = {
         s["pid"]
@@ -146,7 +156,10 @@ def restore_snapshot(router, path: str | os.PathLike) -> dict:
     for pid, rec in snap["programs"].items():
         if rec["finished"]:
             continue
-        prog = sched.program_arrived(pid, rec["kv_bytes_per_token"], 0.0)
+        prog = sched.program_arrived(
+            pid, rec["kv_bytes_per_token"], 0.0,
+            wire_bytes_per_token=rec.get("wire_bytes_per_token"),
+        )
         prog.context_tokens = rec["context_tokens"]
         prog.steps_completed = rec["steps_completed"]
         prog.label = TypeLabel(rec["label"])

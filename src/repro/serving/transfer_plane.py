@@ -30,7 +30,9 @@ Three streaming strategies cover the engines and copy shapes:
 * :class:`_MigrateStream` — the cross-replica shape: one page per chunk
   from the source replica's host tier (device-only pages are first
   staged through the source host) into the destination pool via
-  :meth:`~repro.serving.kvpool.PagePool.import_host_page` (raw-bits, so
+  :meth:`~repro.serving.kvpool.PagePool.import_host_page`
+  (format-tagged verbatim payload — bf16 raw bits or int8 payload plus
+  scale sidecars, matching the pools' shared ``offload_format`` — so
   the landed KV is byte-identical). Commit installs the imported pages
   as a host-resident radix chain on the destination
   (:meth:`~repro.core.radix_tree.TypedRadixTree.insert_host_chain`) and
@@ -247,8 +249,9 @@ class _AtomicStream:
 
 class _MigrateStream:
     """Page-granular cross-replica move: source host tier → destination
-    host tier, one page per chunk, through the pools' raw-bits
-    copy-without-free primitives. Device-only pages on the source (e.g. a
+    host tier, one page per chunk, through the pools'
+    copy-without-free primitives (format-tagged: the payload moves
+    verbatim in the shared ``offload_format``, scale sidecars included). Device-only pages on the source (e.g. a
     shared prefix that was never offloaded) are first staged through the
     source host tier. Commit installs the imported pages as a
     host-resident radix chain on the destination and retires the source

@@ -424,7 +424,10 @@ class Simulation:
             pid = f"s{slot}g{gen}-{trace.program_id}"
             self._slot_trace[slot] = idx + self.n_slots  # stride through corpus
             self._slot_gen[slot] = gen + 1
-        self.sched.program_arrived(pid, self.hw.kv_bytes_per_token, now)
+        self.sched.program_arrived(
+            pid, self.hw.kv_bytes_per_token, now,
+            wire_bytes_per_token=self.hw.kv_wire_bytes_per_token,
+        )
         self._issue(pid, trace, 0, slot, now)
 
     def _issue(

@@ -38,6 +38,19 @@ class HwConfig:
     decode_overhead_s: float = 4e-3   # launch/sampling/framework per step
     prefill_interference: float = 1.7  # decode slowdown while prefilling
     kv_reserve_frac: float = 0.88      # fraction of (HBM - weights) for KV
+    # per-token KV size in the *offload* format — what PCIe/NVMe transfers
+    # and host tiers carry when pages quantize on offload (int8 ≈ half of
+    # kv_bytes_per_token). None = offload format equals device format.
+    kv_wire_bytes_per_token: int | None = None
+
+    @property
+    def wire_bytes_per_token(self) -> int:
+        """Offload-format per-token size with the bf16 fallback applied."""
+        return (
+            self.kv_bytes_per_token
+            if self.kv_wire_bytes_per_token is None
+            else self.kv_wire_bytes_per_token
+        )
 
     @property
     def gpu_kv_bytes(self) -> int:

@@ -72,7 +72,9 @@ class TestBatchedReplay:
         batched steps advancing several slots, and KV movement overlapping
         genuinely batched decode (default async transfer mode)."""
         cfg, params = setup
-        kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        from repro.kernels import kv_quant
+        kvb = kv_quant.token_wire_bytes(
+            cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
         engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
                         n_host_pages=128, max_slots=4, max_seq=256)
         router = MoriRouter(

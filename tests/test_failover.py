@@ -173,9 +173,11 @@ class TestMigrateStream:
 def _two_replica_router(cfg, params, *, seconds_per_64_tokens=60.0):
     from repro.core import SchedulerConfig
     from repro.core.types import TransferCost
+    from repro.kernels import kv_quant
     from repro.serving import MoriRouter
 
-    kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    kvb = kv_quant.token_wire_bytes(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
     engines = [_engine(cfg, params) for _ in range(2)]
     router = MoriRouter(
         engines, scheduler="mori",

@@ -332,10 +332,12 @@ class TestEngineUnderKvsan:
         chunked prefill and async transfers must come out clean."""
         from repro.core import SchedulerConfig
         from repro.core.types import ProgramTrace, RequestRecord, TransferCost
+        from repro.kernels import kv_quant
         from repro.serving import Engine, MoriRouter
 
         cfg, params = setup
-        kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        kvb = kv_quant.token_wire_bytes(
+            cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
         engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
                         n_host_pages=128, max_slots=4, max_seq=256)
         router = MoriRouter(

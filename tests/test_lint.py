@@ -325,6 +325,62 @@ def fn(x):
         assert "KV006" not in rules_hit(run_lint(tmp_path, self.GOOD_UNJITTED))
 
 
+class TestFormatAwareSizing:
+    BAD_DEVICE_ATTR = """
+def cpu_budget(pool, n):
+    cpu_capacity_bytes = n * pool.page_bytes
+    return cpu_capacity_bytes
+"""
+    BAD_BF16_HARDCODE = """
+def kv_size(cfg):
+    kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    return kvb
+"""
+    GOOD_HELPER = """
+def cpu_budget(pool, n):
+    cpu_capacity_bytes = n * pool.host_page_bytes
+    return cpu_capacity_bytes
+"""
+    GOOD_DEVICE_SIDE = """
+def gpu_budget(pool, n):
+    gpu_capacity_bytes = n * pool.page_bytes
+    return gpu_capacity_bytes
+"""
+    SUPPRESSED = """
+def cpu_budget(pool, n):
+    cpu_capacity_bytes = n * pool.page_bytes  # lint: kv008-ok
+    return cpu_capacity_bytes
+"""
+
+    def test_device_attr_in_offload_context(self, tmp_path):
+        vs = run_lint(tmp_path, self.BAD_DEVICE_ATTR)
+        assert "KV008" in rules_hit(vs)
+        [v] = [v for v in vs if v.rule == "KV008"]
+        assert "page_bytes" in v.msg
+
+    def test_bf16_bytes_per_element_hardcode(self, tmp_path):
+        assert "KV008" in rules_hit(run_lint(tmp_path, self.BAD_BF16_HARDCODE))
+
+    def test_format_aware_helper_passes(self, tmp_path):
+        assert "KV008" not in rules_hit(run_lint(tmp_path, self.GOOD_HELPER))
+
+    def test_device_side_math_allowed(self, tmp_path):
+        # a GPU budget *should* be priced at device format — no hint, no flag
+        assert "KV008" not in rules_hit(
+            run_lint(tmp_path, self.GOOD_DEVICE_SIDE))
+
+    def test_marker_suppresses(self, tmp_path):
+        assert "KV008" not in rules_hit(run_lint(tmp_path, self.SUPPRESSED))
+
+    def test_kv_quant_module_exempt(self, tmp_path):
+        # the sizing helper itself is the sanctioned home for raw byte math
+        d = tmp_path / "repro" / "kernels"
+        d.mkdir(parents=True)
+        f = d / "kv_quant.py"
+        f.write_text(self.BAD_BF16_HARDCODE)
+        assert "KV008" not in rules_hit(lint.run([str(f)]))
+
+
 class TestDriver:
     def test_syntax_error_reported_not_crash(self, tmp_path):
         vs = run_lint(tmp_path, "def broken(:\n")

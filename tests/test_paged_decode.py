@@ -9,6 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import Model, materialize
 from repro.serving import Engine, EngineRequest, MoriRouter
+from repro.serving.engine import greedy_token
 from repro.serving.kvpool import PagePool
 from repro.traces import TraceGenConfig, generate_corpus
 
@@ -84,10 +85,17 @@ class TestGoldenTokenIdentity:
                 initial_context_mean=500, max_context=1600,
             )
             corpus = generate_corpus(3, seed=1, cfg=tg)
-            # replay seed picks the synthesized context values: paged and
-            # dense attention differ by ~1 bf16 ulp, so a context whose
-            # top-2 logits tie within that can legitimately argmax apart.
-            # This seed's contexts stay clear of such ties end to end.
+            # Sampling itself is deterministic: every sample site routes
+            # through engine.greedy_token (bf16-rounded, lowest-index on
+            # exact ties — see TestGreedyTieBreaking), so run-to-run and
+            # sub-ulp divergence cannot flip tokens. What remains is real
+            # numerics: dense and paged attention reduce over different
+            # padded layouts and can legitimately differ by one bf16 ulp
+            # of the final logit (replay seed 0 hits a context whose top-2
+            # gap is exactly that ulp — 3.140625 vs 3.125). The pinned
+            # replay seed keeps the synthesized contexts' top-2 gaps above
+            # the one-ulp cross-layout band; it is a workload choice, not
+            # a flake dodge.
             m = router.replay(corpus, vocab_size=cfg.vocab_size,
                               max_new_tokens=4, seed=1)
             assert m.steps_completed >= 9
@@ -110,6 +118,30 @@ class TestGoldenTokenIdentity:
             ref.append(t)
             cur.append(t)
         assert out == ref
+
+
+class TestGreedyTieBreaking:
+    """The deterministic-sampling contract behind the golden tests: every
+    engine sample site routes through ``greedy_token``, which rounds f32
+    logits to bf16 before the argmax so sub-ulp cross-path divergence
+    (paged vs dense gather, bf16 vs int8 pages) becomes an exact tie,
+    broken lowest-index on every backend."""
+
+    def test_planted_exact_tie_breaks_lowest_index(self):
+        logits = (
+            jnp.zeros((2, 8), jnp.float32)
+            .at[0, 3].set(1.0).at[0, 5].set(1.0)      # tie at 3 and 5
+            .at[1, 6].set(1.0).at[1, 2].set(1.0)      # tie at 2 and 6
+        )
+        assert [int(t) for t in greedy_token(logits)] == [3, 2]
+
+    def test_sub_ulp_divergence_collapses_to_same_token(self):
+        # 1e-4 is far below the bf16 ulp at 2.0 (2^-7 * 2 = 0.015625): an
+        # f32 argmax flips between these two vectors, the rounded one not
+        a = jnp.asarray([[0.0, 2.0, 2.0 + 1e-4, 0.0]], jnp.float32)
+        b = jnp.asarray([[0.0, 2.0 + 2e-4, 2.0, 0.0]], jnp.float32)
+        assert int(jnp.argmax(a[0])) != int(jnp.argmax(b[0]))  # the flake
+        assert int(greedy_token(a)[0]) == int(greedy_token(b)[0]) == 1
 
 
 class TestPagePoolBlockTableApi:

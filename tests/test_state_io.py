@@ -53,11 +53,19 @@ def test_snapshot_roundtrip(cfg_params, tmp_path):
     _mid_flight(router, n=3)
     p = save_snapshot(router, tmp_path / "state.json")
     snap = json.loads(p.read_text())
-    assert snap["version"] == 2
+    assert snap["version"] == 3
     assert len(snap["programs"]) == 3
     # v2: per-replica tier usage + decode-slot occupancy (idle here)
     assert len(snap["replicas"]) == 1
     assert snap["replicas"][0]["slots"] == []
+    # v3: tier formats ride along (bf16 fleet -> bf16 everywhere, and the
+    # per-program wire size collapses to None = device size)
+    assert snap["replicas"][0]["device_format"] == "bf16"
+    assert snap["replicas"][0]["offload_format"] == "bf16"
+    assert all(
+        rec["wire_bytes_per_token"] is None
+        for rec in snap["programs"].values()
+    )
 
     router2 = _router(cfg, params)
     counters = restore_snapshot(router2, p)

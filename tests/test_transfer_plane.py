@@ -178,10 +178,12 @@ def setup():
 
 def _run(cfg, params, *, sync: bool):
     from repro.core import SchedulerConfig
+    from repro.kernels import kv_quant
     from repro.serving import Engine, MoriRouter
     from repro.traces import burst_cancel_corpus
 
-    kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    kvb = kv_quant.token_wire_bytes(
+        cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
     engine = Engine(cfg, params, page_tokens=8, n_device_pages=256,
                     n_host_pages=64, max_slots=4, max_seq=256)
     # p1's 64-token offload takes ~20 virtual seconds: queued at the t=3
@@ -244,7 +246,9 @@ class TestRealPathCancel:
         from repro.core.types import TransferCost
         from repro.serving import Engine, MoriRouter
 
-        kvb = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        from repro.kernels import kv_quant
+        kvb = kv_quant.token_wire_bytes(
+            cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, "bf16")
         engine = Engine(cfg, params, page_tokens=8, n_device_pages=64,
                         n_host_pages=64, max_slots=2, max_seq=256)
         router = MoriRouter(
